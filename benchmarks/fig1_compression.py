@@ -1,0 +1,73 @@
+"""Figure 1/2 reproduction (CPU scale): EF21-Muon with the paper's
+compressor zoo vs the uncompressed baseline (= Gluon/Scion) on a reduced
+NanoGPT trained over the synthetic Zipf-Markov corpus with 4 heterogeneous
+workers.
+
+Reports, per compressor: steps/tokens to reach the target loss and the
+w2s bytes sent per worker to reach it — the paper's claim is that the
+Rank/Top(+Natural) compressors reach the same loss with 4-7x fewer w2s
+bytes (Figure 1 right, Figure 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.schedule import warmup_linear_decay
+from repro.data import SyntheticLM
+from repro.models.api import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+COMPRESSORS = ["identity", "natural", "top10", "top15+natural",
+               "rank10", "rank15+natural"]
+
+
+def run(fast: bool = False):
+    cfg = get_config("nanogpt-124m").reduced()
+    model = build_model(cfg)
+    n_workers = 4
+    seq, batch = (32, 8) if fast else (64, 16)
+    max_steps = 60 if fast else 220
+    target = 5.4 if fast else 4.4
+    shape = ShapeSpec("f", "train", seq, batch)
+    data = SyntheticLM(cfg, shape, n_workers=n_workers, seed=0)
+    tokens_per_step = seq * batch
+    rows = []
+    for comp in COMPRESSORS:
+        tr = Trainer(model, TrainerConfig(
+            n_workers=n_workers, beta=0.7, w2s=comp, remat=False,
+            use_pallas=False))
+        state = tr.init(jax.random.key(0))
+        wire = tr.opt.w2s_bytes_per_worker(state["x"], tr.metas)
+        step = jax.jit(tr.make_step())
+        sched = warmup_linear_decay(0.01, 8, max_steps, final_frac=0.3)
+        t0 = time.time()
+        reached = None
+        loss = float("nan")
+        for i in range(max_steps):
+            state, aux = step(state, data.batch_at(i), sched(i))
+            loss = float(aux["loss"])
+            if loss <= target:
+                reached = i + 1
+                break
+        steps = reached if reached else max_steps
+        rows.append({
+            "bench": "fig1", "compressor": comp,
+            "target_loss": target, "reached": bool(reached),
+            "final_loss": round(loss, 3), "steps": steps,
+            "tokens": steps * tokens_per_step,
+            "w2s_bytes_per_step": wire,
+            "w2s_bytes_to_target": steps * wire,
+            "wall_s": round(time.time() - t0, 1)})
+    # savings vs uncompressed baseline (Figure 1 right)
+    base = next(r for r in rows if r["compressor"] == "identity")
+    for r in rows:
+        r["byte_savings_vs_id"] = round(
+            base["w2s_bytes_to_target"] / r["w2s_bytes_to_target"], 2)
+        r["token_overhead_vs_id"] = round(
+            r["tokens"] / base["tokens"], 2)
+    return rows

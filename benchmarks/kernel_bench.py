@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: the jnp oracle path (the CPU execution path)
+timed per call, plus correctness deltas of the Pallas path (interpret
+mode — Pallas timing on CPU is not meaningful, the TARGET is TPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import natural_compress, newton_schulz
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = False):
+    rows = []
+    key = jax.random.key(0)
+    shapes = [(256, 256), (512, 512)] if fast else \
+        [(256, 256), (512, 512), (1024, 1024), (768, 3072)]
+    ns_ref = jax.jit(lambda g: ref.newton_schulz_ref(g, steps=5))
+    for shape in shapes:
+        g = jax.random.normal(key, shape, jnp.float32)
+        us = _time(ns_ref, g)
+        # Pallas correctness delta (interpret mode)
+        got = newton_schulz(g, steps=5, use_pallas=True, interpret=True)
+        want = ref.newton_schulz_ref(g, steps=5)
+        err = float(jnp.max(jnp.abs(got - want)))
+        flops = 5 * 3 * 2 * min(shape) ** 2 * max(shape)
+        rows.append({"bench": "kernels", "kernel": "newton_schulz",
+                     "shape": f"{shape[0]}x{shape[1]}",
+                     "us_per_call_ref": round(us, 1),
+                     "gflops_ref": round(flops / us / 1e3, 1),
+                     "pallas_max_abs_err": err})
+    n = 1 << (16 if fast else 20)
+    x = jax.random.normal(key, (n,)).astype(jnp.bfloat16)
+    nat = jax.jit(lambda x: natural_compress(x, use_pallas=False))
+    us = _time(nat, x)
+    rows.append({"bench": "kernels", "kernel": "natural_compress",
+                 "shape": str(n), "us_per_call_ref": round(us, 1),
+                 "gbps_ref": round(n * 2 / us / 1e3, 2)})
+    return rows

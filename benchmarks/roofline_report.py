@@ -1,0 +1,77 @@
+"""Roofline report: reads results/dryrun.jsonl (written by
+repro.launch.dryrun) and emits the per-(arch x shape x mesh) three-term
+roofline table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "results/dryrun.jsonl")
+
+
+def load(path: str = RESULTS, tag: str | None = None):
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if tag and r.get("tag") != tag:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"], r.get("tag"))] = r
+    return list(recs.values())
+
+
+def run(fast: bool = False):
+    rows = []
+    for r in sorted(load(), key=lambda r: (r["arch"], r["shape"],
+                                           r["mesh"])):
+        row = {"bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+               "mesh": r["mesh"], "tag": r.get("tag"),
+               "status": r["status"]}
+        if r["status"] == "ok":
+            row.update({
+                "t_compute_s": round(r["t_compute_s"], 5),
+                "t_memory_s": round(r["t_memory_s"], 5),
+                "t_collective_s": round(r["t_collective_s"], 5),
+                "bottleneck": r["bottleneck"],
+                "useful_flops_ratio": round(r["useful_flops_ratio"] or 0,
+                                            3),
+                "coll_gb": round(r["coll_bytes"] / 1e9, 3),
+                "peak_gb": round(r.get("memory", {}).get(
+                    "peak_bytes", 0) / 1e9, 2)})
+        elif r["status"] == "skipped":
+            row["reason"] = r.get("reason", "")[:60]
+        else:
+            row["error"] = r.get("error", "")[:80]
+        rows.append(row)
+    return rows
+
+
+def markdown_table(tag: str = "baseline") -> str:
+    recs = sorted(load(tag=tag), key=lambda r: (r["arch"], r["shape"],
+                                                r["mesh"]))
+    lines = [
+        "| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+        "bottleneck | useful FLOPs | coll GB/dev | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} | "
+                f"{r['t_collective_s']:.4g} | **{r['bottleneck']}** | "
+                f"{(r['useful_flops_ratio'] or 0):.2f} | "
+                f"{r['coll_bytes'] / 1e9:.2f} | "
+                f"{r.get('memory', {}).get('peak_bytes', 0) / 1e9:.1f} |")
+        elif r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | skipped | — | — | — |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | | | | | | |")
+    return "\n".join(lines)

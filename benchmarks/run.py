@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure plus the
+roofline report. Prints JSON rows per benchmark.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+BENCHES = ("table2", "ef_necessity", "convergence", "kernels", "fig1",
+           "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced step counts (CI)")
+    ap.add_argument("--only", default=None, help=f"run one of {BENCHES}")
+    args = ap.parse_args()
+
+    from benchmarks import (convergence, ef_necessity, fig1_compression,
+                            kernel_bench, roofline_report, table2_bytes)
+    mods = {"table2": table2_bytes, "ef_necessity": ef_necessity,
+            "convergence": convergence, "kernels": kernel_bench,
+            "fig1": fig1_compression, "roofline": roofline_report}
+    names = [args.only] if args.only else list(BENCHES)
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        print(f"### {name}", flush=True)
+        try:
+            rows = mods[name].run(fast=args.fast)
+            for r in rows:
+                print(json.dumps(r), flush=True)
+        except Exception as e:
+            failures += 1
+            print(json.dumps({"bench": name, "status": "error",
+                              "error": f"{type(e).__name__}: {e}"}),
+                  flush=True)
+        print(f"### {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: EF21-Muon in ~40 lines.
+
+Train a reduced Granite-3-2B on the synthetic corpus with 2 heterogeneous
+workers, Top-10% + error feedback w2s compression, and a spectral-norm
+LMO (= distributed compressed Muon).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.schedule import warmup_linear_decay
+from repro.data import SyntheticLM
+from repro.models.api import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+cfg = get_config("granite-3-2b").reduced()     # 2 layers, d=256 (CPU-sized)
+model = build_model(cfg)
+
+trainer = Trainer(model, TrainerConfig(
+    n_workers=2,          # EF21 workers (pods / DP groups at scale)
+    beta=0.5,             # momentum: M <- (1-b) M + b grad
+    w2s="top10",          # worker->server compressor (EF21)
+    s2w="identity",       # server->worker compressor (EF21-P off)
+    use_pallas=False,     # CPU: use the jnp oracle for Newton-Schulz
+    remat=False))
+
+data = SyntheticLM(cfg, ShapeSpec("q", "train", seq=64, batch=8),
+                   n_workers=2)
+state = trainer.init(jax.random.key(0))
+step = jax.jit(trainer.make_step())
+radius = warmup_linear_decay(0.01, warmup=5, total=60)
+
+wire = trainer.opt.w2s_bytes_per_worker(state["x"], trainer.metas)
+dense = trainer.opt.dense_bytes(state["x"])
+print(f"w2s payload: {wire / 1e3:.0f} kB/worker/step "
+      f"({wire / dense:.2%} of dense)")
+
+for i in range(60):
+    state, aux = step(state, data.batch_at(i), radius(i))
+    if i % 10 == 0 or i == 59:
+        print(f"step {i:3d}  loss {float(aux['loss']):.3f}")

@@ -1,0 +1,30 @@
+"""Serve a small model with batched requests: prefill once, decode many.
+
+Exercises the production decode path (ring/KV/recurrent caches) on three
+different architecture families.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.models.api import build_model, make_batch
+from repro.train.serve import Server
+
+for arch in ("granite-3-2b", "recurrentgemma-2b", "xlstm-1.3b"):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    server = Server(model)
+    batch = make_batch(cfg, ShapeSpec("s", "prefill", 24, 4),
+                       jax.random.key(1))
+    t0 = time.time()
+    toks = server.generate(params, batch, max_new=12,
+                           temperature=0.8, key=jax.random.key(2))
+    dt = time.time() - t0
+    print(f"{arch:20s} generated {toks.shape} in {dt:5.2f}s "
+          f"({toks.size / dt:6.1f} tok/s)   first row: "
+          f"{' '.join(str(int(t)) for t in toks[0][:8])}")

@@ -1,0 +1,35 @@
+"""Architecture registry: ``get_config(name)`` / ``ARCHS``.
+
+One module per assigned architecture (exact published specs, source cited
+in each file) plus the paper's own NanoGPT-124M experimental model.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ArchConfig, ShapeSpec
+
+ARCHS = (
+    "qwen2-vl-7b",
+    "whisper-small",
+    "starcoder2-15b",
+    "xlstm-1.3b",
+    "mixtral-8x7b",
+    "qwen2.5-3b",
+    "granite-3-2b",
+    "deepseek-v3-671b",
+    "mistral-large-123b",
+    "recurrentgemma-2b",
+    "nanogpt-124m",
+)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; have {ARCHS}")
+    mod = importlib.import_module(
+        f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+__all__ = ["ARCHS", "SHAPES", "ArchConfig", "ShapeSpec", "get_config"]

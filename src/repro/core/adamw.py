@@ -1,0 +1,38 @@
+"""Minimal AdamW — the baseline optimizer the paper's family replaces,
+and the conventional choice for non-hidden layers in Muon deployments
+(paper footnote 2). Pure functional, optax-compatible shape."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params: Any) -> dict:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(z, params),
+            "nu": jax.tree.map(z, params)}
+
+
+def adamw_update(params: Any, grads: Any, state: dict, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["mu"], grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["nu"], grads)
+    lr = jnp.asarray(lr, jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        step_ = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay
+                      * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), {"step": step, "mu": mu, "nu": nu}

@@ -1,0 +1,56 @@
+"""Reference (uncompressed, single-node) Gluon / Muon / Scion (§B.1).
+
+Independent implementation of the LMO-based family the paper builds on:
+
+    M_i <- (1 - beta_i) M_i + beta_i G_i
+    X_i <- X_i + t_i * LMO_{B(0,1)}(M_i)          (eq. (7))
+
+Used (a) as the uncompressed baseline in all benchmarks and (b) as the
+ground truth for the exact-recovery test: EF21-Muon with identity
+compressors and n_workers = 1 must reproduce these iterates bit-for-bit
+(paper §3, "Role of Compression").
+
+With spectral LMOs on hidden layers this is Muon; adding sign LMOs for
+embedding-like layers gives Scion; arbitrary per-layer norms give Gluon.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .lmo import lmo_direction
+from .muon import ParamMeta, _vmap_n
+
+
+def gluon_init(params: Any) -> dict:
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def gluon_update(params: Any, grads: Any, opt_state: dict, metas: Any,
+                 t: jax.Array | float, beta: float = 0.1,
+                 ns_steps: int = 5, use_pallas="auto") -> tuple[Any, dict]:
+    """One Gluon step; returns (new_params, new_opt_state)."""
+    treedef = jax.tree.structure(params)
+    metas_l = treedef.flatten_up_to(metas)
+    m_new = jax.tree.map(
+        lambda m, g: (1.0 - beta) * m + beta * g.astype(jnp.float32),
+        opt_state["m"], grads)
+    new_params = []
+    for x, m, meta in zip(treedef.flatten_up_to(params),
+                          treedef.flatten_up_to(m_new), metas_l):
+        radius = jnp.asarray(t, jnp.float32) * meta.radius_scale
+
+        def upd(x, g, meta=meta, radius=radius):
+            d = lmo_direction(g, meta.lmo, ns_steps=ns_steps,
+                              use_pallas=use_pallas)
+            return (x.astype(jnp.float32)
+                    + radius * d.astype(jnp.float32)).astype(x.dtype)
+
+        new_params.append(_vmap_n(upd, meta.stack_dims)(x, m))
+    return treedef.unflatten(new_params), {
+        "step": opt_state["step"] + 1, "m": m_new}

@@ -1,0 +1,109 @@
+"""Linear minimization oracles over norm balls and sharp operators (§2, §C).
+
+Conventions (paper eq. (2) and §C):
+  * ``lmo_direction(g, kind)`` returns Z* = LMO_{B(0,1)}(g)
+    = argmin_{||Z|| <= 1} <g, Z>, so <g, Z*> = -||g||_* and ||Z*|| = 1.
+  * ``sharp(g, kind)`` returns g# = -||g||_* * lmo_direction(g)
+    (the sharp operator; <g, g#> = ||g#||^2 and ||g||_* = ||g#||).
+  * the optimizer step is X <- X + t * lmo_direction(G), i.e.
+    X <- LMO_{B(X, t)}(G).
+
+Norm kinds:
+  spectral   : spectral-norm ball; Z* = -UV^T via Newton-Schulz (Muon).
+  sign       : l_inf ball; Z* = -sign(g) (Scion embeddings / 1-D params).
+  col_l2     : ball of max-column-l2 norm (||.||_{1->2}); per-column
+               normalised direction (Gluon column-wise variant).
+  row_l2     : ball of max-row-l2 norm; per-row normalised direction.
+  euclid     : Frobenius/l2 ball; Z* = -g/||g||_F (normalised SGD).
+  nuclear    : nuclear-norm ball; Z* = -u1 v1^T (rank-1, power iteration).
+               Doubles as the paper's §D.1 "LMO as compressor" example.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import newton_schulz
+
+EPS = 1e-12
+
+SUPPORTED = ("spectral", "sign", "col_l2", "row_l2", "euclid", "nuclear")
+
+# LMO kind -> the norm whose unit ball it minimises over
+BALL_NORM = {"spectral": "spectral", "sign": "linf", "euclid": "frobenius",
+             "col_l2": "col_l2", "row_l2": "row_l2", "nuclear": "nuclear"}
+
+
+def _power_iteration_rank1(g: jax.Array, iters: int = 12) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Top singular triple (sigma, u, v) of a 2-D matrix by power iteration
+    (deterministic start: leading row-sum vector)."""
+    gf = g.astype(jnp.float32)
+    v = jnp.sum(jnp.abs(gf), axis=0) + 1e-3
+    v = v / (jnp.linalg.norm(v) + EPS)
+
+    def body(v, _):
+        u = gf @ v
+        u = u / (jnp.linalg.norm(u) + EPS)
+        v = gf.T @ u
+        s = jnp.linalg.norm(v)
+        v = v / (s + EPS)
+        return v, None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    u = gf @ v
+    s = jnp.linalg.norm(u)
+    u = u / (s + EPS)
+    return s, u, v
+
+
+def lmo_direction(g: jax.Array, kind: str, *, ns_steps: int = 5,
+                  use_pallas: str | bool = "auto") -> jax.Array:
+    """Z* = argmin_{||Z||_kind <= 1} <g, Z>."""
+    if kind == "spectral":
+        if g.ndim != 2:
+            raise ValueError("spectral LMO needs a 2-D matrix")
+        return -newton_schulz(g, steps=ns_steps, use_pallas=use_pallas)
+    if kind == "sign":
+        return -jnp.sign(g)
+    if kind == "euclid":
+        gf = g.astype(jnp.float32)
+        return (-gf / (jnp.linalg.norm(gf) + EPS)).astype(g.dtype)
+    if kind == "col_l2":
+        gf = g.astype(jnp.float32)
+        col = jnp.sqrt(jnp.sum(jnp.square(gf), axis=0, keepdims=True))
+        return (-gf / (col + EPS)).astype(g.dtype)
+    if kind == "row_l2":
+        gf = g.astype(jnp.float32)
+        row = jnp.sqrt(jnp.sum(jnp.square(gf), axis=1, keepdims=True))
+        return (-gf / (row + EPS)).astype(g.dtype)
+    if kind == "nuclear":
+        s, u, v = _power_iteration_rank1(g)
+        return (-jnp.outer(u, v)).astype(g.dtype)
+    raise ValueError(f"unknown LMO kind: {kind}")
+
+
+def sharp(g: jax.Array, kind: str, **kw) -> jax.Array:
+    """g# = argmax_X {<g, X> - ||X||^2/2} = -||g||_* LMO_{B(0,1)}(g)."""
+    from .norms import dual_norm
+    d = lmo_direction(g, kind, **kw)
+    return (-dual_norm(g, BALL_NORM[kind])
+            * d.astype(jnp.float32)).astype(g.dtype)
+
+
+def lmo_step(x: jax.Array, g: jax.Array, radius: jax.Array | float,
+             kind: str, **kw) -> jax.Array:
+    """X^{k+1} = LMO_{B(X^k, t)}(G^k) = X^k + t * LMO_{B(0,1)}(G^k)."""
+    d = lmo_direction(g, kind, **kw)
+    return (x.astype(jnp.float32)
+            + jnp.asarray(radius, jnp.float32) * d.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def default_radius_scale(shape: tuple[int, ...], kind: str) -> float:
+    """Muon-style per-layer radius scaling: sqrt(max(1, out/in)) for
+    spectral matrices (out = shape[-1] fan-out in our [in, out] layout),
+    1.0 otherwise."""
+    if kind == "spectral" and len(shape) == 2:
+        fan_in, fan_out = shape[0], shape[1]
+        return max(1.0, fan_out / max(fan_in, 1)) ** 0.5
+    return 1.0

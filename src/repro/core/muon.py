@@ -1,0 +1,295 @@
+"""EF21-Muon — the paper's contribution (Algorithms 1-3) as a composable
+JAX optimizer.
+
+Layer-wise by construction: every parameter leaf i carries a ParamMeta
+(norm kind for its LMO, radius scale, stack depth), its own worker
+compressors C_{i,j} and server compressor C_i, matching Algorithm 3.
+
+The optimizer *owns* gradient evaluation (workers differentiate at their
+model estimate W, not at X), so the API takes a grad function:
+
+    opt   = EF21Muon(cfg)
+    state = opt.init(key, params, metas)
+    state, aux = opt.step(state, grad_and_loss, batch, t)
+
+where ``grad_and_loss(params, batch_slice) -> (loss, grads)`` and ``batch``
+has a leading worker dimension of size cfg.n_workers. Per-worker gradients
+are computed with ``jax.vmap(..., in_axes=(None, 0))`` — workers stay
+computationally independent, so the only cross-worker traffic in the
+lowered HLO is the all-gather of compressed payloads (hooked via
+``reshard_payloads`` by the distributed trainer).
+
+Special cases recovered exactly (tested):
+  * w2s = s2w = identity, n_workers = 1  ==> Gluon (=> Muon for spectral
+    norms, Scion for spectral+sign maps).
+  * beta = 1.0  ==> the deterministic Algorithm 2.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import compressors as comp_lib
+from .compressors import get_compressor
+from .error_feedback import ef_compress_step
+from .lmo import default_radius_scale, lmo_direction
+
+
+@dataclass(frozen=True)
+class ParamMeta:
+    """Per-leaf optimizer metadata (the 'layer' of the layer-wise method)."""
+    lmo: str = "spectral"          # norm kind for the LMO step
+    radius_scale: float = 1.0      # per-layer radius multiplier t_i = scale * t
+    stack_dims: int = 0            # leading dims that stack independent layers
+    compressible: bool = True      # False => identity w2s compressor (tiny leaves)
+
+
+def meta_like(x: jax.Array, path: str = "") -> ParamMeta:
+    """Heuristic meta: 2-D matrices -> spectral (Muon), everything else ->
+    sign (Scion's l_inf), embeddings/unembeddings -> sign."""
+    shape = x.shape
+    name = path.lower()
+    stack = 0
+    core = shape
+    # stacked layers [L, ...] / experts [L, E, ...] are detected by models;
+    # heuristic only handles unstacked leaves.
+    if len(core) == 2 and not any(k in name for k in ("embed", "unembed", "lm_head")):
+        return ParamMeta("spectral", default_radius_scale(core, "spectral"), stack)
+    return ParamMeta("sign", 1.0, stack)
+
+
+@dataclass(frozen=True)
+class EF21MuonConfig:
+    n_workers: int = 1
+    beta: float = 0.1              # gradient weight: M = (1-beta) M + beta g
+    w2s: str = "identity"          # worker->server compressor (C_D)
+    s2w: str = "identity"          # server->worker compressor (C_P, EF21-P)
+    ns_steps: int = 5
+    use_pallas: Any = "auto"
+    wire_dtype: Any = jnp.bfloat16
+    state_dtype: Any = jnp.float32
+
+
+def _slice_shape(shape: tuple[int, ...], stack_dims: int) -> tuple[int, ...]:
+    return tuple(shape[stack_dims:])
+
+
+def _resolve_compressor(name: str, slice_shape: tuple[int, ...]):
+    """Pick a compatible compressor for this leaf: rank-type compressors
+    need matrices; fall back to Natural for vectors (tiny anyway)."""
+    comp = get_compressor(name)
+    needs_2d = isinstance(comp, comp_lib.RankK) or (
+        isinstance(comp, comp_lib.WithNatural)
+        and isinstance(comp.inner, (comp_lib.RankK, comp_lib.TopKSVD)))
+    if needs_2d and len(slice_shape) != 2:
+        return get_compressor("natural") if "natural" in name else comp_lib.TopK(0.25)
+    return comp
+
+
+def _vmap_n(fn, n: int):
+    for _ in range(n):
+        fn = jax.vmap(fn)
+    return fn
+
+
+class EF21Muon:
+    def __init__(self, cfg: EF21MuonConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array, params: Any, metas: Any) -> dict:
+        cfg = self.cfg
+        sd = cfg.state_dtype
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params)
+        g_w = jax.tree.map(
+            lambda p: jnp.zeros((cfg.n_workers,) + p.shape, sd), params)
+        m_w = None if cfg.beta >= 1.0 else jax.tree.map(
+            lambda p: jnp.zeros((cfg.n_workers,) + p.shape, sd), params)
+
+        leaves, treedef = jax.tree.flatten(params)
+        metas_l = treedef.flatten_up_to(metas)
+        keys = jax.random.split(key, len(leaves) * (cfg.n_workers + 1))
+
+        cw_states, cs_states = [], []
+        for i, (p, m) in enumerate(zip(leaves, metas_l)):
+            sshape = _slice_shape(p.shape, m.stack_dims)
+            wname = cfg.w2s if m.compressible else "identity"
+            wcomp = _resolve_compressor(wname, sshape)
+            scomp = _resolve_compressor(cfg.s2w if m.compressible else "identity", sshape)
+
+            def init_one(k, comp=wcomp, sshape=sshape):
+                return comp.init(k, sshape, jnp.dtype(cfg.wire_dtype))
+
+            stack = p.shape[:m.stack_dims]
+            n_stack = int(math.prod(stack)) if stack else 1
+            wkeys = jax.random.split(keys[i], cfg.n_workers * n_stack).reshape(
+                (cfg.n_workers,) + stack)
+            cw = _vmap_n(init_one, m.stack_dims + 1)(wkeys)
+            skeys = jax.random.split(keys[len(leaves) + i], max(n_stack, 1)
+                                     ).reshape(stack) \
+                if stack else keys[len(leaves) + i]
+            cs = _vmap_n(lambda k, comp=scomp, sshape=sshape: comp.init(
+                k, sshape, jnp.dtype(cfg.wire_dtype)), m.stack_dims)(skeys)
+            cw_states.append(cw)
+            cs_states.append(cs)
+
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "x": params,
+            "g_server": zeros,
+            "g_w": g_w,
+            "m_w": m_w,
+            "cw_state": treedef.unflatten(cw_states),
+        }
+        if cfg.s2w != "identity":
+            state["w"] = jax.tree.map(lambda p: p.astype(sd), params)
+            state["cs_state"] = treedef.unflatten(cs_states)
+        return state
+
+    # ------------------------------------------------------------ bookkeeping
+    def w2s_bytes_per_worker(self, params: Any, metas: Any) -> int:
+        """Static wire cost of one worker->server message (Table 2)."""
+        cfg = self.cfg
+        total = 0
+        for p, m in zip(jax.tree.leaves(params),
+                        jax.tree.flatten(params)[1].flatten_up_to(metas)):
+            sshape = _slice_shape(p.shape, m.stack_dims)
+            comp = _resolve_compressor(cfg.w2s if m.compressible else "identity",
+                                       sshape)
+            n_stack = int(math.prod(p.shape[:m.stack_dims])) if m.stack_dims else 1
+            total += n_stack * comp.payload_bytes(sshape, cfg.wire_dtype)
+        return total
+
+    def dense_bytes(self, params: Any) -> int:
+        return sum(int(math.prod(p.shape)) * jnp.dtype(self.cfg.wire_dtype).itemsize
+                   for p in jax.tree.leaves(params))
+
+    # The jit-friendly entry point: metas are static, so we build the step
+    # function once per (metas, shapes) and let the caller jit it.
+    def make_step(self, metas: Any,
+                  reshard_payloads: Callable = lambda tree: tree,
+                  donate: bool = False) -> Callable:
+        cfg = self.cfg
+
+        def step(state: dict, grad_and_loss: Callable, batch: Any,
+                 t: jax.Array | float) -> tuple[dict, dict]:
+            treedef = jax.tree.structure(state["x"])
+            metas_l = treedef.flatten_up_to(metas)
+
+            # ---- 1. EF21-P: workers' model estimate W
+            if cfg.s2w != "identity":
+                x_l = treedef.flatten_up_to(state["x"])
+                w_l = treedef.flatten_up_to(state["w"])
+                cs_l = treedef.flatten_up_to(state["cs_state"])
+                new_w, new_cs = [], []
+                for x, w, cs, m in zip(x_l, w_l, cs_l, metas_l):
+                    sshape = _slice_shape(x.shape, m.stack_dims)
+                    comp = _resolve_compressor(
+                        cfg.s2w if m.compressible else "identity", sshape)
+
+                    def one(cs, w, x, comp=comp):
+                        _, cs2, w2 = ef_compress_step(comp, cs, w, x,
+                                                      cfg.wire_dtype)
+                        return cs2, w2
+
+                    cs2, w2 = _vmap_n(one, m.stack_dims)(cs, w, x)
+                    new_w.append(w2)
+                    new_cs.append(cs2)
+                w_tree = treedef.unflatten(new_w)
+                cs_tree = treedef.unflatten(new_cs)
+            else:
+                w_tree = state["x"]
+                cs_tree = None
+
+            # ---- 2. per-worker stochastic gradients at W (no cross-worker comm)
+            w_cast = jax.tree.map(
+                lambda w, x: w.astype(x.dtype), w_tree, state["x"])
+            losses, grads = jax.vmap(grad_and_loss, in_axes=(None, 0))(
+                w_cast, batch)
+
+            # ---- 3. momentum + EF21 per worker, layer-wise
+            beta = cfg.beta
+            if state["m_w"] is not None:
+                m_new = jax.tree.map(
+                    lambda m, g: ((1.0 - beta) * m.astype(jnp.float32)
+                                  + beta * g.astype(jnp.float32)
+                                  ).astype(m.dtype),
+                    state["m_w"], grads)
+            else:
+                m_new = jax.tree.map(
+                    lambda g: g.astype(cfg.state_dtype), grads)
+
+            g_w_l = treedef.flatten_up_to(state["g_w"])
+            m_l = treedef.flatten_up_to(m_new)
+            cw_l = treedef.flatten_up_to(state["cw_state"])
+
+            payloads, new_gw, new_cw = [], [], []
+            for gw, m, cw, meta in zip(g_w_l, m_l, cw_l, metas_l):
+                sshape = _slice_shape(gw.shape[1:], meta.stack_dims)
+                comp = _resolve_compressor(
+                    cfg.w2s if meta.compressible else "identity", sshape)
+
+                def one(cw, gw, m, comp=comp):
+                    payload, cw2, gw2 = ef_compress_step(comp, cw, gw, m,
+                                                         cfg.wire_dtype)
+                    return payload, cw2, gw2
+
+                payload, cw2, gw2 = _vmap_n(one, meta.stack_dims + 1)(cw, gw, m)
+                payloads.append(payload)
+                new_gw.append(gw2)
+                new_cw.append(cw2)
+
+            # ---- 4. "server" receives payloads: gather across the worker
+            # axis (trainer supplies the resharding hook), decompress, average.
+            payloads = reshard_payloads(payloads)
+            g_s_l = treedef.flatten_up_to(state["g_server"])
+            new_gs = []
+            for gs, payload, meta in zip(g_s_l, payloads, metas_l):
+                sshape = _slice_shape(gs.shape, meta.stack_dims)
+                comp = _resolve_compressor(
+                    cfg.w2s if meta.compressible else "identity", sshape)
+
+                def dec(payload, comp=comp, sshape=sshape):
+                    return comp.decompress(payload, sshape, jnp.float32)
+
+                deltas = _vmap_n(dec, meta.stack_dims + 1)(payload)
+                new_gs.append((gs.astype(jnp.float32)
+                               + jnp.mean(deltas, axis=0)).astype(gs.dtype))
+
+            # ---- 5. layer-wise LMO step on the server iterate
+            x_l = treedef.flatten_up_to(state["x"])
+            new_x = []
+            for x, gs, meta in zip(x_l, new_gs, metas_l):
+                radius = jnp.asarray(t, jnp.float32) * meta.radius_scale
+
+                def upd(x, g, meta=meta, radius=radius):
+                    d = lmo_direction(g, meta.lmo, ns_steps=cfg.ns_steps,
+                                      use_pallas=cfg.use_pallas)
+                    return (x.astype(jnp.float32)
+                            + radius * d.astype(jnp.float32)).astype(x.dtype)
+
+                new_x.append(_vmap_n(upd, meta.stack_dims)(x, gs))
+
+            new_state = {
+                "step": state["step"] + 1,
+                "x": treedef.unflatten(new_x),
+                "g_server": treedef.unflatten(new_gs),
+                "g_w": treedef.unflatten(new_gw),
+                "m_w": m_new if state["m_w"] is not None else None,
+                "cw_state": treedef.unflatten(new_cw),
+            }
+            if cfg.s2w != "identity":
+                new_state["w"] = w_tree
+                new_state["cs_state"] = cs_tree
+            aux = {"loss": jnp.mean(losses),
+                   "grad_est_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in new_gs))}
+            return new_state, aux
+
+        return step

@@ -1,0 +1,96 @@
+"""Norms and dual norms on matrix/vector spaces (paper §1.1, §B).
+
+Each norm is identified by a string key. For every primal norm we expose
+its dual (`DUAL[key]`) and a numerical evaluator. Spectral/nuclear duality,
+l1/linf duality, and Frobenius self-duality are the cases used by the
+LMO-based optimizers (Muon = spectral, Scion embeddings = linf, Gluon =
+arbitrary per-layer choice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# primal -> dual
+DUAL = {
+    "spectral": "nuclear",
+    "nuclear": "spectral",
+    "frobenius": "frobenius",
+    "linf": "l1",
+    "l1": "linf",
+    "col_l2": "col_l2_dual",      # ||X||_{1->2}: max column l2; dual = sum of column l2
+    "col_l2_dual": "col_l2",
+    "row_l2": "row_l2_dual",      # ||X||_{2->inf}-ish: max row l2; dual = sum of row l2
+    "row_l2_dual": "row_l2",
+}
+
+
+def _svals(x: jax.Array) -> jax.Array:
+    return jnp.linalg.svd(x.reshape(x.shape[0], -1) if x.ndim > 2 else x,
+                          compute_uv=False)
+
+
+def norm(x: jax.Array, kind: str) -> jax.Array:
+    """Evaluate ||x||_kind. 1-D inputs treat vector norms; matrix norms
+    require 2-D input (higher-rank inputs are flattened to 2-D on the
+    trailing axes for spectral/nuclear)."""
+    if kind == "frobenius":
+        return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+    if kind == "linf":
+        return jnp.max(jnp.abs(x))
+    if kind == "l1":
+        return jnp.sum(jnp.abs(x))
+    if kind == "spectral":
+        if x.ndim < 2:
+            return jnp.max(jnp.abs(x))
+        return jnp.max(_svals(x.astype(jnp.float32)))
+    if kind == "nuclear":
+        if x.ndim < 2:
+            return jnp.sum(jnp.abs(x))
+        return jnp.sum(_svals(x.astype(jnp.float32)))
+    if kind == "col_l2":
+        # operator norm l1 -> l2 : max over columns of column l2 norm
+        x2 = x.astype(jnp.float32)
+        return jnp.max(jnp.sqrt(jnp.sum(jnp.square(x2), axis=0)))
+    if kind == "col_l2_dual":
+        x2 = x.astype(jnp.float32)
+        return jnp.sum(jnp.sqrt(jnp.sum(jnp.square(x2), axis=0)))
+    if kind == "row_l2":
+        x2 = x.astype(jnp.float32)
+        return jnp.max(jnp.sqrt(jnp.sum(jnp.square(x2), axis=1)))
+    if kind == "row_l2_dual":
+        x2 = x.astype(jnp.float32)
+        return jnp.sum(jnp.sqrt(jnp.sum(jnp.square(x2), axis=1)))
+    raise ValueError(f"unknown norm kind: {kind}")
+
+
+def dual_norm(x: jax.Array, kind: str) -> jax.Array:
+    """||x||_* where * is the dual of `kind`."""
+    return norm(x, DUAL[kind])
+
+
+def norm_equivalence_constants(shape: tuple[int, ...], kind: str) -> tuple[float, float]:
+    """(rho_lo, rho_hi) with rho_lo * ||X||_kind <= ||X||_2 <= rho_hi * ||X||_kind.
+
+    Used by the theory-facing diagnostics (Remark 7: spectral has
+    rho_lo = 1, rho_hi = sqrt(rank))."""
+    import math
+    n = 1
+    for s in shape:
+        n *= s
+    if kind == "frobenius":
+        return 1.0, 1.0
+    if kind == "spectral":
+        r = min(shape) if len(shape) >= 2 else 1
+        return 1.0, math.sqrt(r)
+    if kind == "linf":
+        return 1.0, math.sqrt(n)
+    if kind == "l1":
+        return 1.0 / math.sqrt(n), 1.0
+    if kind == "col_l2":
+        c = shape[-1] if len(shape) >= 2 else 1
+        return 1.0, math.sqrt(c)
+    if kind == "row_l2":
+        r = shape[0] if len(shape) >= 2 else 1
+        return 1.0, math.sqrt(r)
+    raise ValueError(f"no equivalence constants for {kind}")

@@ -1,0 +1,40 @@
+"""Radius / learning-rate schedules. The paper adopts Karpathy's nanoGPT
+scheduler (linear warmup + decay); we also provide the theory-facing
+constant-over-sqrt(K) radius of Theorems 4/17 and cosine/WSD variants."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(t0: float):
+    return lambda step: jnp.asarray(t0, jnp.float32)
+
+
+def theory_radius(eta: float, total_steps: int):
+    """t^k = eta / sqrt(K+1) — problem-constant-free radii (Thm 4/17)."""
+    val = eta / (total_steps + 1) ** 0.5
+    return lambda step: jnp.asarray(val, jnp.float32)
+
+
+def warmup_linear_decay(t0: float, warmup: int, total: int,
+                        final_frac: float = 0.1):
+    """nanoGPT-style: linear warmup then linear decay to final_frac * t0."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.asarray(max(warmup, 1), jnp.float32)
+        warm = step / w
+        frac = jnp.clip((step - w) / max(total - warmup, 1), 0.0, 1.0)
+        decay = 1.0 - (1.0 - final_frac) * frac
+        return t0 * jnp.where(step < w, warm, decay)
+    return fn
+
+
+def cosine(t0: float, warmup: int, total: int, final_frac: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.asarray(max(warmup, 1), jnp.float32)
+        warm = step / w
+        prog = jnp.clip((step - w) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return t0 * jnp.where(step < w, warm, cos)
+    return fn

@@ -1,0 +1,106 @@
+"""Deterministic synthetic LM data: Zipf-Markov token streams.
+
+Tokens follow a per-worker affine-Markov chain with Zipf-distributed
+innovations:
+
+    x_{t+1} = (a_j * x_t + b_j + z_t) mod V,     z_t ~ Zipf-ish(V)
+
+so the stream has (a) a Zipf marginal like natural text and (b) learnable
+bigram structure that differs across workers — the paper's heterogeneous
+setting (distinct D_j per worker, §1.1) in miniature. A model that learns
+the per-worker transition laws drives the loss well below the unigram
+entropy, so loss curves are meaningful for the Figure 1/2 reproductions.
+
+Everything is a pure function of (seed, step, worker): batches are
+reproducible, resumable and need no filesystem.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def _zipf(key: jax.Array, shape, vocab: int) -> jax.Array:
+    """Approximate Zipf(1) sampler via the inverse-CDF of a log-uniform."""
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-6, 1.0)
+    return jnp.clip(jnp.floor(jnp.exp(u * jnp.log(float(vocab)))) - 1,
+                    0, vocab - 1).astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class SyntheticLM:
+    cfg: ArchConfig
+    shape: ShapeSpec
+    n_workers: int = 1
+    seed: int = 0
+
+    def _tokens(self, key: jax.Array, lead: tuple[int, ...],
+                seq: int) -> jax.Array:
+        v = self.cfg.vocab
+        _, _, k2, k3 = jax.random.split(key, 4)
+        # per-worker Markov laws: fixed across steps (they are what the
+        # model learns), derived from the seed only
+        law = jax.random.key(self.seed + 1)
+        k0, k1 = jax.random.split(law)
+        n_w = lead[0] if len(lead) == 2 else 1
+        a = 1 + 2 * jax.random.randint(k0, (n_w,), 0, 16)     # odd multiplier
+        b = jax.random.randint(k1, (n_w,), 0, v)
+        x0 = _zipf(k2, lead, v)
+        k3a, k3b = jax.random.split(k3)
+        z = _zipf(k3a, lead + (seq,), v)
+        # 85% of transitions follow the worker's deterministic affine law,
+        # 15% jump to a fresh Zipf sample: strong learnable bigram signal
+        # on top of a Zipf-ish marginal.
+        follow = jax.random.bernoulli(k3b, 0.85, lead + (seq,))
+        a = a.reshape((n_w,) + (1,) * (len(lead) - 1)) if len(lead) == 2 \
+            else a[0]
+        b = b.reshape((n_w,) + (1,) * (len(lead) - 1)) if len(lead) == 2 \
+            else b[0]
+
+        def step(x, zf):
+            z_t, f_t = zf
+            x = jnp.where(f_t, (a * x + b) % v, z_t)
+            return x, x
+
+        _, toks = jax.lax.scan(
+            step, x0, (jnp.moveaxis(z, -1, 0), jnp.moveaxis(follow, -1, 0)))
+        return jnp.moveaxis(toks, 0, -1)
+
+    def batch_at(self, step: int) -> dict:
+        """Materialise the batch for a given global step (jit-able)."""
+        cfg, sh = self.cfg, self.shape
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        if sh.kind == "train":
+            lead = (self.n_workers, sh.batch // self.n_workers)
+        else:
+            lead = (sh.batch,)
+        kt, ke = jax.random.split(key)
+        toks = self._tokens(kt, lead, sh.seq + 1)
+        batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+        if sh.kind == "prefill":
+            batch.pop("labels")
+        if cfg.family == "vlm":
+            # stubbed vision frontend: pseudo patch embeddings + M-RoPE ids
+            emb = jax.random.normal(ke, lead + (sh.seq, cfg.d_model),
+                                    jnp.dtype(cfg.dtype)) * 0.02
+            pos = jnp.broadcast_to(
+                jnp.arange(sh.seq)[:, None], lead + (sh.seq, 3))
+            batch = {"embeds": emb, "pos": pos, **{
+                k: v for k, v in batch.items() if k == "labels"}}
+        if cfg.family == "audio":
+            # stubbed conv/mel frontend: pseudo frame embeddings
+            frames = jax.random.normal(
+                ke, lead + (cfg.encoder.n_frames, cfg.d_model),
+                jnp.dtype(cfg.dtype)) * 0.02
+            batch["frames"] = frames
+        return batch
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,9 @@
+# Pallas TPU kernels for EF21-Muon's compute hot-spots:
+#  - newton_schulz: blocked-matmul quintic NS orthogonalisation (Muon LMO)
+#  - natural_pack: Natural-compression bit-manipulation encode
+# Each has a pure-jnp oracle in ref.py and a padded jit wrapper in ops.py.
+from .ops import (NS_COEFFS, natural_compress, natural_decompress,
+                  newton_schulz)
+
+__all__ = ["NS_COEFFS", "natural_compress", "natural_decompress",
+           "newton_schulz"]

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel for Natural compression encode (Horvath et al. 2022).
+
+Rounds bf16 values to the nearest power of two and emits the (exponent
+code, sign) pair per element as uint8 planes — pure VPU bit manipulation,
+elementwise-tiled in VMEM. The 8:1 sign bit-packing (which makes the wire
+payload 9 bits/value) is a cheap reshape+dot done in ops.py after the
+kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _natural_encode_kernel(x_ref, code_ref, sign_ref):
+    bits = jax.lax.bitcast_convert_type(x_ref[...].astype(jnp.bfloat16),
+                                        jnp.uint16)
+    sign = (bits >> 15).astype(jnp.uint8)
+    exp = ((bits >> 7) & 0xFF).astype(jnp.uint16)
+    mant_hi = (bits >> 6) & 0x1
+    exp_rounded = jnp.minimum(exp + mant_hi, 254)
+    is_zero = (bits & 0x7FFF) == 0
+    code_ref[...] = jnp.where(is_zero, jnp.uint16(0), exp_rounded).astype(jnp.uint8)
+    sign_ref[...] = sign
+
+
+def natural_encode(x: jax.Array, *, block_rows: int = 256,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Encode a [r, 128*k] bf16/f32 array -> (uint8 codes, uint8 signs).
+
+    Rows must be a multiple of block_rows (ops.py pads/reshapes 1-D inputs).
+    """
+    r, cols = x.shape
+    assert r % block_rows == 0, (x.shape, block_rows)
+    grid = (r // block_rows,)
+    spec = pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _natural_encode_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((r, cols), jnp.uint8),
+                   jax.ShapeDtypeStruct((r, cols), jnp.uint8)),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,104 @@
+"""Jit-ready wrappers around the Pallas kernels with padding + CPU fallback.
+
+``use_pallas='auto'`` selects the Pallas path on TPU backends and the jnp
+reference (the oracle in ref.py) on CPU, where Pallas only runs in
+interpret mode (kept for tests, too slow for the training loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .natural_pack import natural_encode
+from .newton_schulz import ns_iteration_pallas
+
+NS_COEFFS = ref.NS_COEFFS
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int) -> tuple[jax.Array, tuple[int, int]]:
+    m, n = x.shape
+    pm = (-m) % mult
+    pn = (-n) % mult
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, (m, n)
+
+
+def newton_schulz(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
+                  eps: float = 1e-7, use_pallas: str | bool = "auto",
+                  block: int = 128, interpret: bool = False) -> jax.Array:
+    """Orthogonalise ``g`` (approximate UV^T of its SVD).
+
+    Pallas path: pad to MXU-aligned multiples of ``block``, run the quintic
+    iteration with blocked VMEM matmuls, then slice back. Zero padding is
+    exact (padded rows/cols remain zero through X' = aX + (bA + cA^2)X).
+    """
+    if g.ndim != 2:
+        raise ValueError("newton_schulz expects 2-D input")
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.newton_schulz_ref(g, steps=steps, coeffs=coeffs, eps=eps)
+    transpose = g.shape[0] > g.shape[1]
+    x = g.T if transpose else g
+    x = x / (jnp.linalg.norm(x.astype(jnp.float32)) + eps).astype(x.dtype)
+    x, (m, n) = _pad_to(x, block)
+    for _ in range(steps):
+        x = ns_iteration_pallas(x, coeffs, block=block, interpret=interpret)
+    x = x[:m, :n]
+    return x.T if transpose else x
+
+
+def _pack_bits(bits01: jax.Array) -> jax.Array:
+    """[k*8] uint8 of {0,1} -> [k] uint8 bit-packed (LSB first)."""
+    b = bits01.reshape(-1, 8).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(b * weights[None, :], axis=1, dtype=jnp.uint8)
+
+
+def _unpack_bits(packed: jax.Array) -> jax.Array:
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return ((packed[:, None] >> shifts[None, :]) & 1).reshape(-1)
+
+
+def natural_compress(x: jax.Array, use_pallas: str | bool = "auto",
+                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Natural-compress any-shaped array -> (codes uint8 [N], packed signs
+    uint8 [ceil(N/8)]). The wire payload is 9 bits/value."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if use_pallas:
+        lanes = 128
+        pad = (-n) % (lanes * 8)
+        padded = jnp.pad(flat, (0, pad)).reshape(-1, lanes)
+        rows = padded.shape[0]
+        block_rows = rows if rows < 256 else 256
+        rpad = (-rows) % block_rows
+        if rpad:
+            padded = jnp.pad(padded, ((0, rpad), (0, 0)))
+        code, sign = natural_encode(padded, block_rows=block_rows,
+                                    interpret=interpret)
+        code = code.reshape(-1)[:n + pad]
+        sign = sign.reshape(-1)[:n + pad]
+    else:
+        pad = (-n) % 8
+        flat_p = jnp.pad(flat, (0, pad))
+        code, sign = ref.natural_compress_ref(flat_p)
+    return code[:n], _pack_bits(jnp.pad(sign[:n], (0, (-n) % 8)))
+
+
+def natural_decompress(code: jax.Array, packed_sign: jax.Array,
+                       shape: tuple[int, ...], dtype=jnp.bfloat16) -> jax.Array:
+    n = code.shape[0]
+    sign = _unpack_bits(packed_sign)[:n]
+    vals = ref.natural_decompress_ref(code, sign)
+    return vals.reshape(shape).astype(dtype)

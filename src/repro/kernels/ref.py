@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each Pallas kernel is validated
+against these references over shape/dtype sweeps in tests/test_kernels.py
+(interpret=True on CPU), and they double as the CPU execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Jordan et al. (2024) quintic Newton-Schulz coefficients.
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def fused_matmul_ref(a: jax.Array, b: jax.Array, c: jax.Array | None,
+                     alpha: float = 1.0, beta: float = 1.0) -> jax.Array:
+    """out = alpha * c + beta * (a @ b), f32 accumulation, output dtype f32."""
+    out = beta * jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    if c is not None:
+        out = out + alpha * c.astype(jnp.float32)
+    return out
+
+
+def ns_iteration_ref(x: jax.Array, coeffs=NS_COEFFS) -> jax.Array:
+    """One quintic Newton-Schulz iteration: X' = aX + (bA + cA^2) X, A = XX^T."""
+    a, b, c = coeffs
+    xf = x.astype(jnp.float32)
+    gram = xf @ xf.T
+    poly = b * gram + c * (gram @ gram)
+    return (a * xf + poly @ xf).astype(x.dtype)
+
+
+def newton_schulz_ref(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
+                      eps: float = 1e-7) -> jax.Array:
+    """Approximate UV^T of the SVD of g (orthogonalisation), jnp oracle.
+
+    Operates on the transposed matrix when rows > cols so the gram matrix
+    is built on the small side, matching the Muon reference implementation.
+    """
+    if g.ndim != 2:
+        raise ValueError("newton_schulz_ref expects a 2-D matrix")
+    transpose = g.shape[0] > g.shape[1]
+    x = g.T if transpose else g
+    x = x / (jnp.linalg.norm(x.astype(jnp.float32)) + eps).astype(x.dtype)
+    for _ in range(steps):
+        x = ns_iteration_ref(x, coeffs)
+    return x.T if transpose else x
+
+
+def natural_compress_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Deterministic natural compression of bf16 values: round to the
+    nearest power of two. Returns (exp_code uint8, sign uint8 in {0,1}).
+
+    bf16 layout: 1 sign | 8 exponent | 7 mantissa. Rounding to the nearest
+    power of two increments the exponent when the mantissa >= 0.5 (top
+    mantissa bit set). Relative error <= 1/3 => contractive with
+    alpha = 1 - 1/9 = 8/9 in any elementwise norm.
+    Zero maps to code 0; inf/nan clamp to code 254.
+    """
+    xb = x.astype(jnp.bfloat16)
+    bits = jax.lax.bitcast_convert_type(xb, jnp.uint16)
+    sign = (bits >> 15).astype(jnp.uint8)
+    exp = ((bits >> 7) & 0xFF).astype(jnp.uint16)
+    mant_hi = (bits >> 6) & 0x1
+    exp_rounded = jnp.minimum(exp + mant_hi, 254).astype(jnp.uint8)
+    is_zero = (bits & 0x7FFF) == 0
+    code = jnp.where(is_zero, jnp.uint8(0), exp_rounded)
+    return code, sign
+
+
+def natural_decompress_ref(code: jax.Array, sign: jax.Array) -> jax.Array:
+    """Inverse of natural_compress_ref -> bf16 powers of two."""
+    bits = (sign.astype(jnp.uint16) << 15) | (code.astype(jnp.uint16) << 7)
+    bits = jnp.where(code == 0, sign.astype(jnp.uint16) << 15, bits)
+    return jax.lax.bitcast_convert_type(bits.astype(jnp.uint16), jnp.bfloat16)

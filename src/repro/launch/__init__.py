@@ -1,0 +1,3 @@
+# Launch layer: production mesh, multi-pod dry-run, train/serve CLIs.
+# Import modules directly (repro.launch.mesh / .dryrun / .train / .serve);
+# dryrun must be the FIRST import in its process (it sets XLA_FLAGS).

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) combination this lowers the
+real entry point — the EF21-Muon ``train_step`` for train shapes,
+``prefill`` / ``decode_step`` for serving shapes — against
+ShapeDtypeStruct inputs (no allocation), compiles it for the production
+mesh, and records:
+
+  * memory_analysis()            (per-device bytes: proves it fits)
+  * cost_analysis()              (per-device HLO FLOPs / bytes accessed)
+  * collective bytes             (parsed from the compiled HLO module)
+  * three-term roofline + bottleneck (launch/hlo_analysis.py)
+
+Results are appended to results/dryrun.jsonl (idempotent by
+(arch, shape, mesh, tag) key) — the roofline report and EXPERIMENTS.md
+read from there.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.dist.sharding import (batch_pspec, param_pspec, serve_pspecs,
+                                 to_shardings)
+from repro.launch.hlo_analysis import roofline_terms
+from repro.launch.hlo_cost import analyze
+from repro.launch.mesh import make_production_mesh, n_workers_for
+from repro.models.api import build_model, input_specs
+from repro.train.trainer import Trainer, TrainerConfig
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../../..",
+                       "results/dryrun.jsonl")
+RESULTS = os.path.abspath(RESULTS)
+
+FSDP_THRESHOLD = 8e9   # params above this get FSDP over the data axis
+
+
+def _abstract_params(model):
+    box = {}
+
+    def initp(k):
+        p, m = model.init(k)
+        box["metas"] = m
+        return p
+
+    shapes = jax.eval_shape(initp, jax.random.key(0))
+    return shapes, box["metas"]
+
+
+def _param_counts(cfg, shapes, metas):
+    treedef = jax.tree.structure(shapes)
+    metas_l = treedef.flatten_up_to(metas)
+    total = active = 0
+    for p, m in zip(jax.tree.leaves(shapes), metas_l):
+        n = math.prod(p.shape)
+        total += n
+        if m.stack_dims >= 2 and cfg.moe:   # routed expert stack [L, E, ...]
+            active += n * (cfg.moe.top_k / cfg.moe.n_experts)
+        else:
+            active += n
+    return int(total), int(active)
+
+
+def _model_flops(cfg, shape, total, active):
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        return 6.0 * active * tokens
+    return 2.0 * active * tokens
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full attention (no sliding-window/recurrent state): "
+                "sub-quadratic requirement not met; documented in DESIGN.md")
+    return None
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               w2s: str = "rank10", tag: str = "baseline",
+               fsdp: bool | None = None, beta: float = 0.1,
+               s2w: str = "identity", pad_heads: int | None = None,
+               zero1_lmo: bool = False):
+    """Lower + compile one (arch, shape, mesh). Returns the record dict."""
+    import dataclasses
+    cfg = get_config(arch)
+    if pad_heads:
+        # TP adaptation (§Perf C2): pad q-heads up to a multiple of the
+        # model axis — kills the head_dim-split score all-reduces.
+        cfg = dataclasses.replace(cfg, n_heads=pad_heads, head_dim=cfg.hd)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "w2s": w2s}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.devices.shape)
+    model = build_model(cfg)
+    pshapes, metas = _abstract_params(model)
+    total, active = _param_counts(cfg, pshapes, metas)
+    use_fsdp = (total > FSDP_THRESHOLD) if fsdp is None else fsdp
+    rec.update(n_devices=n_dev, params=total, params_active=active,
+               fsdp=use_fsdp)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        n_w = n_workers_for(mesh)
+        tr = Trainer(model, TrainerConfig(
+            n_workers=n_w, beta=beta, w2s=w2s, s2w=s2w, fsdp=use_fsdp,
+            use_pallas=False, zero1_lmo=zero1_lmo), mesh=mesh)
+        batch = input_specs(cfg, shape, n_workers=n_w)
+        state = tr.state_shapes()
+        jitted = tr.jit_step(batch)
+        lowered = jitted.lower(state, batch,
+                               jax.ShapeDtypeStruct((), jnp.float32))
+    else:
+        psec = jax.tree.map(
+            lambda s, m: param_pspec(m, s.shape, mesh, fsdp=use_fsdp),
+            pshapes, metas)
+        p_sh = to_shardings(psec, mesh)
+        cache = model.cache_spec(shape.batch, shape.seq)
+        c_sh = to_shardings(serve_pspecs(cache, shape.batch, mesh), mesh)
+        batch = input_specs(cfg, shape)
+        b_sh = to_shardings(batch_pspec(batch, mesh, shape.kind), mesh)
+        fn = model.prefill if shape.kind == "prefill" else model.decode_step
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh))
+        lowered = jitted.lower(pshapes, batch, cache)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    # primary costs: trip-count-aware static analyzer (XLA cost_analysis
+    # counts while bodies once — see hlo_cost.py docstring)
+    cost = analyze(hlo_text)
+    flops = float(cost["flops"])
+    bytes_acc = float(cost["hbm_bytes"])
+    xla_cost = compiled.cost_analysis() or {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {"argument_bytes": int(ma.argument_size_in_bytes),
+               "output_bytes": int(ma.output_size_in_bytes),
+               "temp_bytes": int(ma.temp_size_in_bytes),
+               "peak_bytes": int(ma.argument_size_in_bytes
+                                 + ma.temp_size_in_bytes)}
+    except Exception as e:  # CPU backend may not implement it
+        mem = {"error": str(e)[:200]}
+    mflops = _model_flops(cfg, shape, total, active)
+    terms = roofline_terms(flops, bytes_acc, cost["coll_bytes"])
+    rec.update(
+        status="ok", t_lower_s=round(t_lower, 1),
+        t_compile_s=round(t_compile, 1),
+        hlo_flops=flops, hlo_bytes=bytes_acc,
+        coll_bytes=int(cost["coll_bytes"]),
+        coll_by_kind=cost["coll_by_kind"],
+        xla_flops=float(xla_cost.get("flops", 0.0)),
+        xla_bytes=float(xla_cost.get("bytes accessed", 0.0)),
+        model_flops=mflops, model_flops_per_dev=mflops / n_dev,
+        useful_flops_ratio=(mflops / n_dev) / flops if flops else None,
+        memory=mem, **terms)
+    return rec
+
+
+# --------------------------------------------------------------------- CLI
+
+def _load_done(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r["tag"]))
+                except Exception:
+                    pass
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--w2s", default="rank10")
+    ap.add_argument("--s2w", default="identity")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    ap.add_argument("--pad-heads", type=int, default=None,
+                    help="pad q-heads to this count (TP adaptation, C2)")
+    ap.add_argument("--zero1", action="store_true",
+                    help="beyond-paper layer-parallel LMO sharding")
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [a for a in ARCHS if a != "nanogpt-124m"] if args.all \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    done = set() if args.force else _load_done(args.out)
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                key = (arch, shape, mesh, args.tag)
+                if key in done:
+                    print(f"[skip-done] {key}", flush=True)
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh} "
+                      f"(w2s={args.w2s}, tag={args.tag})", flush=True)
+                try:
+                    rec = lower_pair(arch, shape, mesh == "multi",
+                                     w2s=args.w2s, tag=args.tag, fsdp=fsdp,
+                                     s2w=args.s2w, pad_heads=args.pad_heads,
+                                     zero1_lmo=args.zero1)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                           "tag": args.tag, "status": "error",
+                           "error": f"{type(e).__name__}: {e}"[:500],
+                           "trace": traceback.format_exc()[-2000:]}
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                brief = {k: rec.get(k) for k in
+                         ("status", "t_compile_s", "hlo_flops", "coll_bytes",
+                          "bottleneck", "reason", "error")}
+                print(f"   -> {brief}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

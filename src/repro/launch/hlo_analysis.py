@@ -1,0 +1,95 @@
+"""Collective-byte accounting from lowered/compiled HLO text.
+
+``cost_analysis()`` has no collective term, so we parse the (SPMD
+partitioned, per-device) HLO module: build a table of instruction output
+sizes, then for every collective op (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute) sum the byte sizes of
+its *operands* — the data each device puts on the wire.
+
+This is per-device program text, so the sums are bytes-per-device per
+step, which is what the roofline collective term wants.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+) = (.*?) ([\w\-]+)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {'total': bytes, 'by_kind': {kind: bytes}, 'count': int}."""
+    sizes: dict[str, int] = {}
+    pending: list[tuple[str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        sizes[name.lstrip("%")] = _type_bytes(type_str)
+        base = op.rstrip(".0123456789")
+        for coll in _COLLECTIVES:
+            if base == coll or base == coll + "-start" or \
+                    base == coll + "-done":
+                if base.endswith("-done"):
+                    break  # counted at -start
+                # operand list: everything up to the first '),' at depth 0
+                args = line[line.index("(") + 1:]
+                depth = 0
+                end = len(args)
+                for i, ch in enumerate(args):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        if depth == 0:
+                            end = i
+                            break
+                        depth -= 1
+                ops = [a.strip().lstrip("%")
+                       for a in args[:end].split(",") if a.strip()]
+                pending.append((coll, ",".join(ops)))
+                break
+    by_kind: dict[str, int] = defaultdict(int)
+    count = 0
+    for coll, ops in pending:
+        b = sum(sizes.get(o, 0) for o in ops.split(",") if o)
+        by_kind[coll] += b
+        count += 1
+    return {"total": int(sum(by_kind.values())),
+            "by_kind": dict(by_kind), "count": count}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, *, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, ici_bw: float = 50e9) -> dict:
+    """Three-term roofline in seconds, per device (TPU v5e constants:
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI)."""
+    t_c = flops / peak_flops
+    t_m = bytes_accessed / hbm_bw
+    t_x = coll_bytes / ici_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return {"t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bottleneck": dom}

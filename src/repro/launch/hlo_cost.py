@@ -1,0 +1,421 @@
+"""Static cost analyzer over compiled HLO text with *trip-count-aware*
+loop accounting.
+
+Why: ``compiled.cost_analysis()`` counts a while-loop body ONCE, but our
+models scan over layers (and chunked attention scans over chunks), so the
+built-in numbers undercount FLOPs, HBM bytes and collective bytes by the
+trip count (verified: a scanned 8-layer matmul reports 1/8 the FLOPs of
+the unrolled version). This module parses the per-device HLO module and
+propagates per-computation costs through the call graph:
+
+  total(comp) = own_cost(comp)
+                + sum_fusion    boundary-bytes only (internals are fused)
+                + sum_call      total(callee)
+                + sum_while     trip_count * (total(body) + total(cond))
+
+with
+  * FLOPs: 2 * |output| * contracted-size for every dot (recursing into
+    fused computations), |output| * dims for convolutions.
+  * HBM bytes: operand + output bytes of every materialising top-level op
+    (fusions count their boundary, which is exactly what XLA materialises).
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, kind-tagged.
+
+Trip counts come from the loop condition: the largest integer literal in
+a `compare(..., constant)` of the condition computation (exact for
+lax.scan/fori_loop lowerings).
+
+Validated against unrolled references in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "reshape", "iota", "partition-id",
+             "replica-id", "convert"}
+# "convert" is free: on TPU dtype converts fuse into producers/consumers
+# (bf16 x bf16 -> f32 is native MXU); the CPU backend materialises them,
+# which would otherwise leak CPU-only traffic into the roofline.
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = tot = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        tot += n * _DTYPE_BYTES[dt]
+    return elems, tot
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    sizes: dict = field(default_factory=dict)     # name -> bytes
+    elems: dict = field(default_factory=dict)     # name -> element count
+    types: dict = field(default_factory=dict)     # name -> type str
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*(\(.*)?\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+) = ((?:\([^=]*?\)|[^(=]*?)) ([\w\-]+)\((.*)$")
+_PARAM_RE = re.compile(r"(%?[\w.\-]+):\s*((?:\w+\[[\d,]*\][^,)]*|\([^)]*\)))")
+_CALLED = re.compile(r"(?:calls|to_apply|body)=(%?[\w.\-]+)")
+_COND = re.compile(r"condition=(%?[\w.\-]+)")
+
+
+def _split_top(s: str) -> list[str]:
+    """Split an operand list at depth 0 commas."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        # strip /*index=N*/ comments: they contain '=' and '(' characters
+        # that break type/operand parsing of long tuple-typed instructions
+        line = re.sub(r"/\*.*?\*/", "", raw.rstrip())
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            head = line.split("{")[0]
+            if m and " = " not in head:
+                cur = Computation(m.group(1).lstrip("%"))
+                # header params carry types
+                for pname, ptype in _PARAM_RE.findall(line):
+                    n = pname.lstrip("%")
+                    _, b = _shape_elems_bytes(ptype)
+                    e, _ = _shape_elems_bytes(ptype)
+                    cur.sizes[n] = b
+                    cur.elems[n] = e
+                    cur.types[n] = ptype
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1).lstrip("%")
+        type_str = m.group(2).strip()
+        op = m.group(3)
+        rest = m.group(4)
+        # operand list: up to matching close paren at depth 0
+        depth = 0
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        ops = [o.strip().lstrip("%") for o in _split_top(rest[:end])
+               if o.strip()]
+        attrs = rest[end + 1:]
+        e, b = _shape_elems_bytes(type_str)
+        cur.sizes[name] = b
+        cur.elems[name] = e
+        cur.types[name] = type_str
+        cur.instrs.append(Instr(name, type_str, op, ops, attrs, line))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer literal in the loop condition (exact for
+    lax.scan / fori_loop: `lt(i, constant(N))`)."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = comp.elems.get(ins.name, 0)
+    lhs_type = comp.types.get(ins.operands[0], "")
+    dims = _first_shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs + ins.line)
+    contracted = 1
+    if m and dims:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(dims):
+                contracted *= dims[int(d)]
+    return 2.0 * out_elems * contracted
+
+
+def _operand_read_bytes(comp: Computation, ins: Instr,
+                        comps: dict[str, Computation]) -> float:
+    """Bytes read by a fusion/op, with slice-aware accounting: a fusion
+    parameter whose only in-fusion consumers are dynamic-slice/slice ops
+    reads only the slice (scan bodies index loop-xs arrays this way — the
+    whole stacked array must NOT be charged per trip)."""
+    called = None
+    m = _CALLED.search(ins.attrs)
+    if m:
+        called = comps.get(m.group(1).lstrip("%"))
+    total = 0.0
+    param_names: dict[int, str] = {}
+    if called is not None:
+        for fi in called.instrs:
+            if fi.op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", fi.line)
+                if pm:
+                    param_names[int(pm.group(1))] = fi.name
+    for idx, opnd in enumerate(ins.operands):
+        size = comp.sizes.get(opnd, 0)
+        pname = param_names.get(idx)
+        if called is not None and pname is not None and size > 0:
+            consumers = [fi for fi in called.instrs if pname in fi.operands]
+            if consumers and all(
+                    fi.op.rstrip(".0123456789") in ("dynamic-slice", "slice")
+                    for fi in consumers):
+                size = sum(called.sizes.get(fi.name, 0) for fi in consumers)
+        total += size
+    return total
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += scale * other.flops
+        self.hbm_bytes += scale * other.hbm_bytes
+        self.coll_bytes += scale * other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + scale * v
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    memo: dict[tuple[str, bool], Cost] = {}
+
+    def comp_cost(name: str, fused: bool) -> Cost:
+        """fused=True: inside a fusion — only FLOPs count (no HBM)."""
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()  # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        c = Cost()
+        for ins in comp.instrs:
+            base = ins.op.rstrip(".0123456789")
+            if base in ("dot", "dot-general"):
+                c.flops += _dot_flops(ins, comp)
+                if not fused:
+                    c.hbm_bytes += comp.sizes.get(ins.name, 0) + sum(
+                        comp.sizes.get(o, 0) for o in ins.operands)
+            elif base == "convolution":
+                # rough: 2 * |out| * (|lhs| / batch) — fine, convs are rare
+                c.flops += 2.0 * comp.elems.get(ins.name, 0) * max(
+                    comp.elems.get(ins.operands[1], 1)
+                    // max(_first_shape_dims(
+                        comp.types.get(ins.operands[1], ""))[-1:][0]
+                        if _first_shape_dims(
+                            comp.types.get(ins.operands[1], "")) else 1, 1),
+                    1)
+                if not fused:
+                    c.hbm_bytes += comp.sizes.get(ins.name, 0) + sum(
+                        comp.sizes.get(o, 0) for o in ins.operands)
+            elif any(base.startswith(k) for k in _COLLECTIVES):
+                if base.endswith("-done"):
+                    continue
+                kind = next(k for k in _COLLECTIVES if base.startswith(k))
+                b = sum(comp.sizes.get(o, 0) for o in ins.operands)
+                c.coll_bytes += b
+                c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + b
+                if not fused:
+                    c.hbm_bytes += b + comp.sizes.get(ins.name, 0)
+            elif base == "fusion":
+                called = _CALLED.search(ins.attrs)
+                if called:
+                    c.add(comp_cost(called.group(1).lstrip("%"), True))
+                if not fused:
+                    if "dynamic-update-slice" in ins.name:
+                        # in-place update: traffic = written region only
+                        szs = [comp.sizes.get(o, 0) for o in ins.operands
+                               if comp.sizes.get(o, 0) > 0]
+                        c.hbm_bytes += min(szs) if szs else 0
+                    elif not ins.name.startswith(
+                            ("wrapped_convert", "convert")):
+                        # convert-rooted fusions are CPU artifacts (the CPU
+                        # dot wants f32; TPU MXU takes bf16 directly)
+                        c.hbm_bytes += comp.sizes.get(ins.name, 0) + \
+                            _operand_read_bytes(comp, ins, comps)
+            elif base == "while":
+                body = _CALLED.search(ins.attrs)
+                cond = _COND.search(ins.attrs)
+                # exact trip count from XLA's backend_config when present
+                m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.line)
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    trips = 1
+                    if cond:
+                        cc = comps.get(cond.group(1).lstrip("%"))
+                        if cc:
+                            trips = _trip_count(cc)
+                if body:
+                    c.add(comp_cost(body.group(1).lstrip("%"), fused),
+                          scale=float(trips))
+            elif base in ("call", "conditional", "map", "reduce",
+                          "reduce-window", "scatter", "select-and-scatter",
+                          "sort", "custom-call"):
+                for target in _CALLED.findall(ins.attrs):
+                    c.add(comp_cost(target.lstrip("%"), fused))
+                if not fused and base != "call":
+                    c.hbm_bytes += comp.sizes.get(ins.name, 0) + sum(
+                        comp.sizes.get(o, 0) for o in ins.operands)
+            elif base in _FREE_OPS:
+                continue
+            elif base == "dynamic-update-slice":
+                # in-place update (XLA aliases the buffer): traffic is the
+                # written region, not the whole buffer.
+                if not fused:
+                    szs = [comp.sizes.get(o, 0) for o in ins.operands
+                           if comp.sizes.get(o, 0) > 0]
+                    c.hbm_bytes += min(szs) if szs else 0
+            elif base in ("dynamic-slice", "slice"):
+                # reads only the slice, not the sliced buffer
+                if not fused:
+                    c.hbm_bytes += 2 * comp.sizes.get(ins.name, 0)
+            else:
+                # materialising elementwise / data-movement op
+                if not fused:
+                    c.hbm_bytes += comp.sizes.get(ins.name, 0) + sum(
+                        comp.sizes.get(o, 0) for o in ins.operands)
+        memo[key] = c
+        return c
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name or entry is None:
+            if entry is None or name.startswith("main"):
+                entry = name
+    c = comp_cost(entry, False)
+    return {"flops": c.flops, "hbm_bytes": c.hbm_bytes,
+            "coll_bytes": c.coll_bytes,
+            "coll_by_kind": {k: int(v) for k, v in c.coll_by_kind.items()},
+            "entry": entry}
+
+
+def top_contributors(text: str, n: int = 20, key: str = "hbm"):
+    """Profile view for the perf loop: the n instructions contributing the
+    most HBM bytes / FLOPs / collective bytes, trip-count-scaled."""
+    comps = parse_module(text)
+    entry = None
+    for name in comps:
+        if entry is None or name.startswith("main"):
+            entry = name
+    rows: list[tuple[float, str, str, str]] = []
+
+    def visit(name: str, scale: float, fused: bool):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            base = ins.op.rstrip(".0123456789")
+            val = 0.0
+            if base in ("dot", "dot-general"):
+                if key == "flops":
+                    val = _dot_flops(ins, comp)
+                elif key == "hbm" and not fused:
+                    val = comp.sizes.get(ins.name, 0) + sum(
+                        comp.sizes.get(o, 0) for o in ins.operands)
+            elif any(base.startswith(k) for k in _COLLECTIVES):
+                if key == "coll" and not base.endswith("-done"):
+                    val = sum(comp.sizes.get(o, 0) for o in ins.operands)
+            elif base == "while":
+                body = _CALLED.search(ins.attrs)
+                m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.line)
+                trips = int(m.group(1)) if m else 1
+                if body:
+                    visit(body.group(1).lstrip("%"), scale * trips, fused)
+                continue
+            elif base == "fusion":
+                called = _CALLED.search(ins.attrs)
+                if called and key == "flops":
+                    visit(called.group(1).lstrip("%"), scale, True)
+                if key == "hbm" and not fused and not ins.name.startswith(
+                        ("wrapped_convert", "convert")):
+                    if "dynamic-update-slice" in ins.name:
+                        szs = [comp.sizes.get(o, 0) for o in ins.operands
+                               if comp.sizes.get(o, 0) > 0]
+                        val = min(szs) if szs else 0
+                    else:
+                        val = comp.sizes.get(ins.name, 0) + \
+                            _operand_read_bytes(comp, ins, comps)
+            elif base in _FREE_OPS or fused:
+                continue
+            elif key == "hbm":
+                if base == "dynamic-update-slice":
+                    szs = [comp.sizes.get(o, 0) for o in ins.operands
+                           if comp.sizes.get(o, 0) > 0]
+                    val = min(szs) if szs else 0
+                elif base in ("dynamic-slice", "slice"):
+                    val = 2 * comp.sizes.get(ins.name, 0)
+                else:
+                    val = comp.sizes.get(ins.name, 0) + sum(
+                        comp.sizes.get(o, 0) for o in ins.operands)
+            if val:
+                rows.append((val * scale, name, ins.op, ins.name))
+
+    visit(entry, 1.0, False)
+    rows.sort(reverse=True)
+    return rows[:n]

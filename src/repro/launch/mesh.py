@@ -1,0 +1,38 @@
+"""Production mesh construction (TPU v5e target).
+
+  single pod : (16, 16)    -> ("data", "model")   256 chips
+  multi pod  : (2, 16, 16) -> ("pod", "data", "model")  512 chips
+
+Functions, not module-level constants, so importing this module never
+touches jax device state. The dry-run process must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import (see dryrun.py); real launches get the mesh from the slice
+topology.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"for the dry-run")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def n_workers_for(mesh: jax.sharding.Mesh) -> int:
+    """EF21 workers = slow-link domains: pods on a multi-pod mesh, the
+    data-parallel groups on a single pod (DESIGN.md §3)."""
+    return mesh.shape["pod"] if "pod" in mesh.axis_names \
+        else mesh.shape["data"]

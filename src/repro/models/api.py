@@ -1,0 +1,103 @@
+"""Model zoo API.
+
+Every architecture family implements the same functional surface:
+
+    model = build_model(cfg)                       # cfg: ArchConfig
+    params, metas = model.init(key)                # metas drive layer-wise LMOs
+    loss = model.loss(params, batch)               # scalar (train step objective)
+    cache = model.init_cache(batch_size, max_len)  # decode state (KV / recurrent)
+    logits, cache = model.prefill(params, batch, cache)
+    logits, cache = model.decode_step(params, batch, cache)
+
+Batches are dicts of arrays. ``input_specs`` builds the ShapeDtypeStruct
+stand-ins for the dry-run (no allocation), including the modality-frontend
+stubs for [vlm]/[audio] (precomputed patch/frame embeddings — the one
+allowed carve-out).
+
+Shape kinds:
+  train   -> {"tokens"|"embeds"(+"pos")|"frames", "labels"} with a leading
+             [n_workers, batch/n_workers] pair of dims.
+  prefill -> same content, [batch] leading dim, no labels.
+  decode  -> {"token": [B,1], "t": []} consumed together with a cache of
+             length seq_len (the shape's seq is the *cache* length).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from .transformer import Transformer
+        return Transformer(cfg)
+    if cfg.family == "audio":
+        from .whisper import WhisperModel
+        return WhisperModel(cfg)
+    if cfg.family == "ssm":
+        from .xlstm import XLSTMModel
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        from .griffin import GriffinModel
+        return GriffinModel(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, n_workers: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape kind.
+
+    For decode kinds the cache is part of the input; build it with
+    ``build_model(cfg).cache_spec(shape.batch, shape.seq)``.
+    """
+    S, B = shape.seq, shape.batch
+    i32 = jnp.int32
+    if shape.kind == "train":
+        assert B % n_workers == 0, (B, n_workers)
+        lead = (n_workers, B // n_workers)
+        sds = lambda *s, dt=i32: jax.ShapeDtypeStruct(lead + s, dt)
+        if cfg.family == "vlm":
+            return {"embeds": sds(S, cfg.d_model, dt=_dt(cfg)),
+                    "pos": sds(S, 3), "labels": sds(S)}
+        if cfg.family == "audio":
+            enc = cfg.encoder
+            return {"frames": sds(enc.n_frames, cfg.d_model, dt=_dt(cfg)),
+                    "tokens": sds(S), "labels": sds(S)}
+        return {"tokens": sds(S), "labels": sds(S)}
+    if shape.kind == "prefill":
+        sds = lambda *s, dt=i32: jax.ShapeDtypeStruct((B,) + s, dt)
+        if cfg.family == "vlm":
+            return {"embeds": sds(S, cfg.d_model, dt=_dt(cfg)), "pos": sds(S, 3)}
+        if cfg.family == "audio":
+            return {"frames": sds(cfg.encoder.n_frames, cfg.d_model, dt=_dt(cfg)),
+                    "tokens": sds(S)}
+        return {"tokens": sds(S)}
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+                "t": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, key: jax.Array,
+               n_workers: int = 1) -> dict:
+    """Materialise a random batch matching ``input_specs`` (smoke tests)."""
+    specs = input_specs(cfg, shape, n_workers)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = cfg.vocab if name in ("tokens", "labels", "token") else max(
+                shape.seq, 4)
+            out[name] = jax.random.randint(sub, s.shape, 0, hi, s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, s.dtype) * 0.02
+    if "t" in out:
+        out["t"] = jnp.asarray(shape.seq - 1, jnp.int32)
+    return out

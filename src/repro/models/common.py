@@ -1,0 +1,264 @@
+"""Shared model primitives: inits + metas, norms, RoPE/M-RoPE, chunked
+flash-style attention (GQA / sliding-window / decode), chunked softmax
+cross-entropy.
+
+Conventions:
+  * weights are [in, out]; activations are x @ W.
+  * every init returns (params, metas) pairs with matching tree structure;
+    ParamMeta drives the layer-wise LMO norm map (hidden matrices ->
+    spectral, embeddings & vectors -> sign) per Scion/Gluon practice.
+  * attention is computed with double chunking (query-chunk outer scan,
+    kv-chunk inner scan, online softmax in f32) so 32k prefill fits without
+    materialising S x S scores.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lmo import default_radius_scale
+from repro.core.muon import ParamMeta
+
+# --------------------------------------------------------------------- inits
+
+def matrix_init(key, in_dim: int, out_dim: int, dtype,
+                stack: tuple[int, ...] = (), scale: float | None = None):
+    """Gaussian fan-in init for a (possibly stacked) weight matrix, with the
+    spectral-LMO meta."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, stack + (in_dim, out_dim), dtype) * scale
+    meta = ParamMeta("spectral",
+                     default_radius_scale((in_dim, out_dim), "spectral"),
+                     stack_dims=len(stack))
+    return w, meta
+
+
+def vector_init(key, dim: int, dtype, stack: tuple[int, ...] = (),
+                value: float | None = None):
+    if value is not None:
+        v = jnp.full(stack + (dim,), value, dtype)
+    else:
+        v = jax.random.normal(key, stack + (dim,), dtype) * 0.02
+    return v, ParamMeta("sign", 1.0, stack_dims=len(stack),
+                        compressible=False)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    w = jax.random.normal(key, (vocab, dim), dtype) * 0.02
+    return w, ParamMeta("sign", 1.0, stack_dims=0)
+
+
+# --------------------------------------------------------------------- norms
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, base: float = 10000.0) -> jax.Array:
+    return base ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                    / (head_dim // 2))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, base: float = 10000.0,
+               mrope_sections: tuple[int, ...] | None = None) -> jax.Array:
+    """Rotary embedding.
+
+    x:   [B, S, H, D]
+    pos: [B, S] (standard) or [B, S, 3] (M-RoPE: temporal/height/width; the
+         half-dim is split into `mrope_sections` channels per Qwen2-VL).
+    """
+    d2 = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], base)  # [d2]
+    if mrope_sections is None:
+        angle = pos.astype(jnp.float32)[..., None] * freqs  # [B,S,d2]
+    else:
+        assert sum(mrope_sections) == d2, (mrope_sections, d2)
+        parts = []
+        start = 0
+        for ch, sec in enumerate(mrope_sections):
+            p = pos[..., ch].astype(jnp.float32)  # [B,S]
+            parts.append(p[..., None] * freqs[start:start + sec])
+            start += sec
+        angle = jnp.concatenate(parts, axis=-1)  # [B,S,d2]
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = x[..., :d2].astype(jnp.float32), x[..., d2:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q [B,Cq,KVH,G,D] x k [B,Ckv,KVH,D] -> [B,KVH,G,Cq,Ckv] (f32).
+
+    f32 accumulation via preferred_element_type — no materialised f32
+    copies of the operands (matters for HBM traffic at 32k contexts)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              q_offset: Any = 0, kv_len: Any = None,
+              chunk_q: int = 1024, chunk_kv: int = 1024,
+              softmax_scale: float | None = None) -> jax.Array:
+    """Double-chunked online-softmax attention with GQA.
+
+    q [B,Sq,Hq,D]; k, v [B,Skv,KVH,D] with Hq = KVH * G.
+    ``q_offset``: absolute position of q[0] (decode / prefill continuation).
+    ``kv_len``: number of valid kv positions (decode against a padded cache).
+    ``window``: sliding-window size (attend to positions > pos - window).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = hq // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    q = q.reshape(b, sq, kvh, g, d)
+
+    chunk_q = min(chunk_q, sq)
+    chunk_kv = min(chunk_kv, skv)
+    # pad to chunk multiples
+    pq = (-sq) % chunk_q
+    pkv = (-skv) % chunk_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    nq = (sq + pq) // chunk_q
+    nkv = (skv + pkv) // chunk_kv
+    if kv_len is None:
+        kv_len = skv
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    kc = k.reshape(b, nkv, chunk_kv, kvh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkv, chunk_kv, kvh, d).transpose(1, 0, 2, 3, 4)
+    qc = q.reshape(b, nq, chunk_q, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q  # qblk [B,Cq,KVH,G,D]
+        qpos = q_offset + qi * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            kpos = ki * chunk_kv + jnp.arange(chunk_kv)
+            s = _gqa_scores(qblk, kblk) * scale  # [B,KVH,G,Cq,Ckv]
+            mask = kpos[None, :] < kv_len
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kvh, g, chunk_q), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, g, chunk_q), jnp.float32),
+                jnp.zeros((b, kvh, g, chunk_q, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nkv), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KVH,G,Cq,D]
+        return None, out.transpose(0, 3, 1, 2, 4)  # [B,Cq,KVH,G,D]
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq + pq, hq, d)
+    return out[:, :sq].astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, kv_len, window: int | None = None,
+                     softmax_scale: float | None = None):
+    """Single-query attention against a (padded) cache.
+
+    q [B,1,Hq,D]; caches [B,Smax,KVH,D]; kv_len scalar/array = valid length.
+    For sliding windows the cache is a ring buffer of size `window`
+    (positions are implicit; masking by validity only).
+    """
+    b, _, hq, d = q.shape
+    _, smax, kvh, _ = k_cache.shape
+    g = hq // kvh
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, 1, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(smax)
+    mask = idx[None, :] < jnp.asarray(kv_len, jnp.int32)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(v_cache.dtype)
+
+
+# -------------------------------------------------------------- loss helpers
+
+def chunked_softmax_xent(hidden: jax.Array, unembed: jax.Array,
+                         labels: jax.Array, mask: jax.Array | None = None,
+                         chunk: int = 1024) -> jax.Array:
+    """Mean next-token cross-entropy with sequence-chunked logits so the
+    [tokens, vocab] matrix never fully materialises.
+
+    hidden [B,S,D], unembed [D,V], labels [B,S] (already shifted).
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((b, s), bool), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, s), bool)
+    n = (s + pad) // chunk
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        h, lbl, msk = xs
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                            unembed.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * msk
+        return (tot + jnp.sum(nll), cnt + jnp.sum(msk)), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (0.0, 0.0), (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_last(hidden_last: jax.Array, unembed: jax.Array) -> jax.Array:
+    """[B,D] x [D,V] -> [B,V] f32 logits (decode head)."""
+    return jnp.einsum("bd,dv->bv", hidden_last.astype(jnp.float32),
+                      unembed.astype(jnp.float32))

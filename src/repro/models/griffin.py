@@ -1,0 +1,289 @@
+"""Griffin / RecurrentGemma (De et al., arXiv:2402.19427).
+
+Residual blocks with a temporal-mixing layer (RG-LRU recurrent block or
+local sliding-window attention, pattern rec:rec:attn) followed by a GeGLU
+MLP block.
+
+Recurrent block: x -> [gelu gate branch] ⊙ [causal conv1d(width 4) ->
+RG-LRU] -> out projection.
+
+RG-LRU:  r_t = sigmoid(W_r x_t + b_r),  i_t = sigmoid(W_i x_t + b_i)
+         a_t = exp(-c * softplus(Λ) * r_t)          (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+
+Training/prefill evaluate the linear recurrence with an associative scan
+(log-depth on TPU); decode is the exact one-step cell. Decode state per
+recurrent layer is (h [B, d_rnn], conv tail [B, w-1, d_rnn]) — O(1) in
+sequence length, so long_500k is admissible.
+
+Pattern remainder: 26 layers = 8 full (rec, rec, attn) periods + 2
+remainder rec layers; the remainder gets its own parameter stack.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .common import chunked_softmax_xent, logits_last
+from .transformer import (ParamBuilder, _add_attn_params, _add_mlp_params,
+                          _add_norm_params, _gqa_attn, _mlp, _norm)
+
+LRU_C = 8.0
+
+
+# ------------------------------------------------------------------- RG-LRU
+
+def _add_rec_params(b: ParamBuilder, cfg: ArchConfig, path: str, stack):
+    d, dr, w = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    _add_norm_params(b, cfg, path + "/ln", d, stack)
+    b.matrix(path + "/w_gate", d, dr, stack=stack)
+    b.matrix(path + "/w_x", d, dr, stack=stack)
+    b.matrix(path + "/conv_w", w, dr, stack=stack, scale=1.0 / math.sqrt(w))
+    b.vector(path + "/conv_b", dr, stack=stack, value=0.0)
+    b.matrix(path + "/w_r", dr, dr, stack=stack)
+    b.vector(path + "/b_r", dr, stack=stack, value=0.0)
+    b.matrix(path + "/w_i", dr, dr, stack=stack)
+    b.vector(path + "/b_i", dr, stack=stack, value=0.0)
+    # Λ init so that a^c ∈ [0.9, 0.999] at r = 1 (paper §2.4)
+    b.vector(path + "/lam", dr, stack=stack, value=0.649)  # softplus^-1(?) set below
+    b.matrix(path + "/w_out", dr, d, stack=stack, scale=1.0 / math.sqrt(dr))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None):
+    """Depthwise causal conv. x [B,S,D], w [W,D]. tail [B,W-1,D] (decode
+    state: previous inputs). Returns (y, new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return y + b, new_tail
+
+
+def rglru(x: jax.Array, p: dict, h0: jax.Array | None):
+    """RG-LRU over a sequence. x [B,S,Dr]; h0 [B,Dr] or None.
+    Returns (y [B,S,Dr], h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32)
+                       + p["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if h0 is not None:
+        # fold the carried state in as a virtual timestep 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0.astype(jnp.float32)[:, None], gated],
+                                axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(x: jax.Array, p: dict, h: jax.Array):
+    """One RG-LRU step. x [B,Dr], h [B,Dr] (f32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32)
+                       + p["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h_new = a * h.astype(jnp.float32) + jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return h_new.astype(x.dtype), h_new
+
+
+def _rec_block(cfg: ArchConfig, p: dict, x: jax.Array, cache, mode: str):
+    h = _norm(cfg, p, "ln", x)
+    gate = jax.nn.gelu((h @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    xr_in = h @ p["w_x"]
+    tail = cache["conv"] if mode == "decode" else None
+    xr, new_tail = _causal_conv(xr_in, p["conv_w"], p["conv_b"], tail)
+    if mode == "decode":
+        y, h_new = rglru_step(xr[:, 0], p, cache["h"])
+        y = y[:, None]
+        new_cache = {"h": h_new, "conv": new_tail}
+    else:
+        y, h_last = rglru(xr, p, None)
+        new_cache = None
+        if mode == "prefill":
+            W = cfg.conv_width
+            pad_in = jnp.pad(xr_in, ((0, 0), (W - 1, 0), (0, 0)))
+            new_cache = {"h": h_last.astype(jnp.float32),
+                         "conv": pad_in[:, -(W - 1):]}
+    out = (gate * y) @ p["w_out"]
+    return x + out, new_cache
+
+
+def _attn_block(cfg: ArchConfig, p: dict, x: jax.Array, pos, cache, t,
+                mode: str):
+    h = _norm(cfg, p, "ln", x)
+    a_out, new_cache = _gqa_attn(cfg, p["attn"], h, pos, cache, t, mode)
+    b_, s = x.shape[:2]
+    a_out = a_out.reshape(b_, s, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+    return x + a_out, new_cache
+
+
+def _mlp_block(cfg: ArchConfig, p: dict, x: jax.Array):
+    return x + _mlp(cfg, p["mlp"], _norm(cfg, p, "ln", x))
+
+
+# -------------------------------------------------------------------- model
+
+class GriffinModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        pat = cfg.block_pattern
+        self.pat = pat
+        self.n_periods = cfg.n_layers // len(pat)
+        self.rem = tuple(pat[:cfg.n_layers % len(pat)])
+        self.n_rec = sum(1 for k in pat if k == "rec")
+        self.n_attn = sum(1 for k in pat if k == "attn")
+
+    def init(self, key):
+        cfg = self.cfg
+        b = ParamBuilder(key, jnp.dtype(cfg.dtype))
+        b.embed("embed", cfg.vocab, cfg.d_model)
+        _add_norm_params(b, cfg, "final_ln", cfg.d_model)
+
+        def add_slots(prefix, nper, pattern):
+            n_rec = sum(1 for k in pattern if k == "rec")
+            n_attn = sum(1 for k in pattern if k == "attn")
+            if n_rec:
+                _add_rec_params(b, cfg, f"{prefix}/rec", (nper, n_rec))
+            if n_attn:
+                stack = (nper, n_attn)
+                _add_norm_params(b, cfg, f"{prefix}/attn/ln", cfg.d_model,
+                                 stack)
+                _add_attn_params(b, cfg, f"{prefix}/attn/attn", stack)
+            stack = (nper, len(pattern))
+            _add_norm_params(b, cfg, f"{prefix}/mlp/ln", cfg.d_model, stack)
+            _add_mlp_params(b, cfg, f"{prefix}/mlp/mlp", cfg.d_model,
+                            cfg.d_ff, stack)
+
+        add_slots("blocks", self.n_periods, self.pat)
+        if self.rem:
+            add_slots("rem", 1, self.rem)
+        return b.params, b.metas
+
+    # ---------------------------------------------------------------- run
+    def _run_group(self, group_p, pattern, x, pos, cache, t, mode, remat):
+        cfg = self.cfg
+
+        def period(x, xs):
+            p, c = xs
+            ir = ia = 0
+            nc_rec, nc_attn = [], []
+            for j, kind in enumerate(pattern):
+                if kind == "rec":
+                    pj = jax.tree.map(lambda a: a[ir], p["rec"])
+                    cj = (jax.tree.map(lambda a: a[ir], c["rec"])
+                          if c else None)
+                    x, nc = _rec_block(cfg, pj, x, cj, mode)
+                    nc_rec.append(nc)
+                    ir += 1
+                else:
+                    pj = jax.tree.map(lambda a: a[ia], p["attn"])
+                    cj = (jax.tree.map(lambda a: a[ia], c["attn"])
+                          if c else None)
+                    x, nc = _attn_block(cfg, pj, x, pos, cj, t, mode)
+                    nc_attn.append(nc)
+                    ia += 1
+                pm = jax.tree.map(lambda a: a[j], p["mlp"])
+                x = _mlp_block(cfg, pm, x)
+            stk = lambda lst: (jax.tree.map(lambda *a: jnp.stack(a), *lst)
+                               if lst and lst[0] is not None else None)
+            return x, {"rec": stk(nc_rec), "attn": stk(nc_attn)}
+
+        if remat and mode == "full":
+            period = jax.checkpoint(period)
+        return jax.lax.scan(period, x, (group_p, cache))
+
+    def _run(self, params, x, pos, cache, t, mode, remat):
+        cfg = self.cfg
+        new_cache = {} if cache is not None else None
+        x, nc = self._run_group(params["blocks"], self.pat, x, pos,
+                                cache["blocks"] if cache else None, t, mode,
+                                remat)
+        if new_cache is not None:
+            new_cache["blocks"] = nc
+        if self.rem:
+            x, nc = self._run_group(params["rem"], self.rem, x, pos,
+                                    cache["rem"] if cache else None, t, mode,
+                                    remat)
+            if new_cache is not None:
+                new_cache["rem"] = nc
+        return _norm(cfg, params, "final_ln", x), new_cache
+
+    def loss(self, params, batch, *, remat: bool = True):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        s = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], x.shape[:2])
+        h, _ = self._run(params, x, pos, None, None, "full", remat)
+        # RecurrentGemma ties the unembedding to the input embedding
+        return chunked_softmax_xent(h, params["embed"].T, batch["labels"])
+
+    # ----------------------------------------------------------------- cache
+    def _group_cache(self, pattern, nper, batch_size, max_len, make):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        n_rec = sum(1 for k in pattern if k == "rec")
+        n_attn = sum(1 for k in pattern if k == "attn")
+        cap = min(cfg.window or max_len, max_len)
+        out = {}
+        out["rec"] = {"h": make((nper, n_rec, batch_size, cfg.d_rnn),
+                                jnp.float32),
+                      "conv": make((nper, n_rec, batch_size,
+                                    cfg.conv_width - 1, cfg.d_rnn), dt)} \
+            if n_rec else None
+        out["attn"] = {
+            "k": make((nper, n_attn, batch_size, cap, cfg.n_kv_heads,
+                       cfg.hd), dt),
+            "v": make((nper, n_attn, batch_size, cap, cfg.n_kv_heads,
+                       cfg.hd), dt)} if n_attn else None
+        return out
+
+    def _cache_tree(self, batch_size, max_len, make):
+        out = {"blocks": self._group_cache(self.pat, self.n_periods,
+                                           batch_size, max_len, make)}
+        if self.rem:
+            out["rem"] = self._group_cache(self.rem, 1, batch_size,
+                                           max_len, make)
+        return out
+
+    def cache_spec(self, batch_size, max_len):
+        return self._cache_tree(batch_size, max_len, jax.ShapeDtypeStruct)
+
+    def init_cache(self, batch_size, max_len):
+        return self._cache_tree(batch_size, max_len, jnp.zeros)
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, batch, cache):
+        x = params["embed"][batch["tokens"]]
+        s = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], x.shape[:2])
+        h, cache = self._run(params, x, pos, cache, None, "prefill", False)
+        return logits_last(h[:, -1], params["embed"].T), cache
+
+    def decode_step(self, params, batch, cache):
+        t = batch["t"]
+        x = params["embed"][batch["token"]]
+        pos = jnp.broadcast_to(t[None, None], x.shape[:2]).astype(jnp.int32)
+        h, cache = self._run(params, x, pos, cache, t, "decode", False)
+        return logits_last(h[:, -1], params["embed"].T), cache

@@ -1,0 +1,205 @@
+"""Whisper (Radford et al., arXiv:2212.04356) — encoder-decoder backbone.
+
+The mel-spectrogram + conv feature extractor is a STUB (the one allowed
+carve-out): the encoder consumes precomputed frame embeddings
+[B, n_frames, d_model] provided by ``input_specs``/the data pipeline.
+
+* Encoder: bidirectional MHA blocks over frames, fixed sinusoidal
+  positions, LayerNorm + GELU (pre-norm), final LayerNorm.
+* Decoder: causal self-attention + cross-attention to the encoder output
+  + GELU MLP; learned positional embeddings.
+* Serving: prefill encodes the frames once and precomputes per-layer
+  cross-attention K/V (cached); decode runs single-token self-attention
+  against a [seq_len] cache + cross-attention against the frame K/V.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .common import (attention, chunked_softmax_xent, decode_attention,
+                     logits_last)
+from .transformer import (ParamBuilder, _add_attn_params, _add_mlp_params,
+                          _add_norm_params, _gqa_attn, _mlp, _norm)
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    """Whisper's fixed sinusoidal position embedding."""
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2,
+                                              dtype=jnp.float32))
+    t = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def _add_cross_params(b: ParamBuilder, cfg: ArchConfig, path: str, stack):
+    d, hd = cfg.d_model, cfg.hd
+    b.matrix(path + "/wq", d, cfg.n_heads * hd, stack=stack)
+    b.matrix(path + "/wk", d, cfg.n_kv_heads * hd, stack=stack)
+    b.matrix(path + "/wv", d, cfg.n_kv_heads * hd, stack=stack)
+    b.matrix(path + "/wo", cfg.n_heads * hd, d, stack=stack,
+             scale=1.0 / math.sqrt(cfg.n_heads * hd))
+
+
+class WhisperModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.encoder is not None
+
+    def init(self, key):
+        cfg = self.cfg
+        b = ParamBuilder(key, jnp.dtype(cfg.dtype))
+        b.embed("embed", cfg.vocab, cfg.d_model)
+        b.embed("pos_embed", cfg.max_position, cfg.d_model)
+        from repro.core.muon import ParamMeta
+        b.matrix("unembed", cfg.d_model, cfg.vocab,
+                 scale=1.0 / math.sqrt(cfg.d_model))
+        b.metas["unembed"] = ParamMeta("sign", 1.0, 0)
+
+        enc_stack = (cfg.encoder.n_layers,)
+        _add_norm_params(b, cfg, "enc_blocks/ln1", cfg.d_model, enc_stack)
+        _add_norm_params(b, cfg, "enc_blocks/ln2", cfg.d_model, enc_stack)
+        _add_attn_params(b, cfg, "enc_blocks/attn", enc_stack)
+        _add_mlp_params(b, cfg, "enc_blocks/mlp", cfg.d_model, cfg.d_ff,
+                        enc_stack)
+        _add_norm_params(b, cfg, "enc_final_ln", cfg.d_model)
+
+        dec_stack = (cfg.n_layers,)
+        for ln in ("ln1", "ln_x", "ln2"):
+            _add_norm_params(b, cfg, f"dec_blocks/{ln}", cfg.d_model,
+                             dec_stack)
+        _add_attn_params(b, cfg, "dec_blocks/attn", dec_stack)
+        _add_cross_params(b, cfg, "dec_blocks/xattn", dec_stack)
+        _add_mlp_params(b, cfg, "dec_blocks/mlp", cfg.d_model, cfg.d_ff,
+                        dec_stack)
+        _add_norm_params(b, cfg, "final_ln", cfg.d_model)
+        return b.params, b.metas
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frames: jax.Array, *, remat: bool = False):
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+        def body(x, p):
+            h = _norm(cfg, p, "ln1", x)
+            a, _ = _gqa_attn(cfg, p["attn"], h, pos, None, None, "full",
+                             causal=False)
+            b_, s = x.shape[:2]
+            x = x + a.reshape(b_, s, -1) @ p["attn"]["wo"]
+            x = x + _mlp(cfg, p["mlp"], _norm(cfg, p, "ln2", x))
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return _norm(cfg, params, "enc_final_ln", x)
+
+    # ---------------------------------------------------------------- decode
+    def _cross_kv(self, params, enc_out):
+        cfg = self.cfg
+        b_, f = enc_out.shape[:2]
+
+        def one(p):
+            k = (enc_out @ p["wk"]).reshape(b_, f, cfg.n_kv_heads, cfg.hd)
+            v = (enc_out @ p["wv"]).reshape(b_, f, cfg.n_kv_heads, cfg.hd)
+            return {"xk": k, "xv": v}
+
+        return jax.vmap(one)(params["dec_blocks"]["xattn"])
+
+    def _decoder(self, params, x, pos, cache, t, mode, cross_kv,
+                 remat: bool):
+        cfg = self.cfg
+
+        def body(x, xs):
+            p, c, xkv = xs
+            h = _norm(cfg, p, "ln1", x)
+            self_c = ({"k": c["k"], "v": c["v"]} if c is not None else None)
+            a, nc = _gqa_attn(cfg, p["attn"], h, pos, self_c, t, mode)
+            b_, s = x.shape[:2]
+            x = x + a.reshape(b_, s, -1) @ p["attn"]["wo"]
+            # cross attention over the (fixed) encoder frames
+            h = _norm(cfg, p, "ln_x", x)
+            q = (h @ p["xattn"]["wq"]).reshape(b_, s, cfg.n_heads, cfg.hd)
+            if mode == "decode":
+                xa = decode_attention(q, xkv["xk"], xkv["xv"],
+                                      kv_len=xkv["xk"].shape[1])
+            else:
+                xa = attention(q, xkv["xk"], xkv["xv"], causal=False)
+            x = x + xa.reshape(b_, s, -1) @ p["xattn"]["wo"]
+            x = x + _mlp(cfg, p["mlp"], _norm(cfg, p, "ln2", x))
+            return x, nc
+
+        if remat and mode == "full":
+            body = jax.checkpoint(body)
+        x, nc = jax.lax.scan(body, x, (params["dec_blocks"], cache, cross_kv))
+        return _norm(cfg, params, "final_ln", x), nc
+
+    def _embed_tokens(self, params, tokens, pos):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        return x + params["pos_embed"][jnp.clip(pos, 0, cfg.max_position - 1)]
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, remat: bool = True):
+        enc_out = self.encode(params, batch["frames"], remat=remat)
+        cross_kv = self._cross_kv(params, enc_out)
+        tokens = batch["tokens"]
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                               tokens.shape)
+        x = self._embed_tokens(params, tokens, pos)
+        h, _ = self._decoder(params, x, pos, None, None, "full", cross_kv,
+                             remat)
+        return chunked_softmax_xent(h, params["unembed"], batch["labels"])
+
+    # ----------------------------------------------------------------- cache
+    def _cache_tree(self, batch_size, max_len, make):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        F = cfg.encoder.n_frames
+        return {"k": make((L, batch_size, max_len, kvh, hd), dt),
+                "v": make((L, batch_size, max_len, kvh, hd), dt),
+                "xk": make((L, batch_size, F, kvh, hd), dt),
+                "xv": make((L, batch_size, F, kvh, hd), dt)}
+
+    def cache_spec(self, batch_size, max_len):
+        return self._cache_tree(batch_size, max_len, jax.ShapeDtypeStruct)
+
+    def init_cache(self, batch_size, max_len):
+        return self._cache_tree(batch_size, max_len, jnp.zeros)
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        cross_kv = self._cross_kv(params, enc_out)
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], tokens.shape)
+        x = self._embed_tokens(params, tokens, pos)
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        h, nc = self._decoder(params, x, pos, self_cache, None, "prefill",
+                              cross_kv, False)
+        cache = {"k": nc["k"], "v": nc["v"],
+                 "xk": cross_kv["xk"].astype(cache["xk"].dtype),
+                 "xv": cross_kv["xv"].astype(cache["xv"].dtype)}
+        return logits_last(h[:, -1], params["unembed"]), cache
+
+    def decode_step(self, params, batch, cache):
+        cfg = self.cfg
+        t = batch["t"]
+        pos = jnp.broadcast_to(t[None, None], batch["token"].shape
+                               ).astype(jnp.int32)
+        x = self._embed_tokens(params, batch["token"], pos)
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        cross_kv = {"xk": cache["xk"], "xv": cache["xv"]}
+        h, nc = self._decoder(params, x, pos, self_cache, t, "decode",
+                              cross_kv, False)
+        cache = dict(cache, k=nc["k"], v=nc["v"])
+        return logits_last(h[:, -1], params["unembed"]), cache

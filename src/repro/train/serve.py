@@ -1,0 +1,63 @@
+"""Serving driver: batched prefill + greedy/temperature decode loop.
+
+``Server`` wraps a model with jitted prefill/decode_step functions (with
+mesh shardings when provided) and a simple continuous-batching-style
+``generate`` that runs prefill once and then steps the decoder; this is
+the engine behind examples/serve_batched.py and the decode dry-run entry
+points.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import batch_pspec, param_pspec, serve_pspecs, \
+    to_shardings
+
+
+@dataclass
+class Server:
+    model: Any
+    mesh: Mesh | None = None
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+
+    # The serve_step the decode-shape dry-runs lower: ONE token against a
+    # seq_len cache.
+    def serve_step_fn(self):
+        return self.model.decode_step
+
+    def generate(self, params, batch: dict, max_new: int,
+                 temperature: float = 0.0, key: jax.Array | None = None):
+        """Prefill on ``batch`` then decode ``max_new`` tokens."""
+        bsz = next(iter(batch.values())).shape[0]
+        prompt_len = (batch["tokens"].shape[1] if "tokens" in batch
+                      else batch["embeds"].shape[1])
+        cache = self.model.init_cache(bsz, prompt_len + max_new)
+        logits, cache = self._prefill(params, batch, cache)
+        toks = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(max_new):
+            toks.append(tok)
+            logits, cache = self._decode(
+                params, {"token": tok,
+                         "t": jnp.asarray(prompt_len + i, jnp.int32)},
+                cache)
+            key = jax.random.fold_in(key, i) if key is not None else None
+            tok = self._sample(logits, temperature, key, i + 1)
+        return jnp.concatenate(toks, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            jax.random.fold_in(key, i), logits / temperature,
+            axis=-1)[:, None].astype(jnp.int32)

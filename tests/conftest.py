@@ -1,0 +1,16 @@
+import os
+import sys
+
+# src-layout import path (PYTHONPATH=src also works)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices.
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)
