@@ -3,7 +3,10 @@ JAX optimizer.
 
 Layer-wise by construction: every parameter leaf i carries a ParamMeta
 (norm kind for its LMO, radius scale, stack depth), its own worker
-compressors C_{i,j} and server compressor C_i, matching Algorithm 3.
+compressors C_{i,j} and server compressor C_i, matching Algorithm 3. All
+per-leaf mechanics (slice shapes, compressor resolution, stack vmaps)
+live in one ``repro.dist.layerwise.LayerPlan`` built once per
+(treedef, metas, shapes); the phases below state algorithm steps only.
 
 The optimizer *owns* gradient evaluation (workers differentiate at their
 model estimate W, not at X), so the API takes a grad function:
@@ -26,18 +29,19 @@ Special cases recovered exactly (tested):
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from . import compressors as comp_lib
-from .compressors import get_compressor
+from repro.dist.layerwise import LayerPlan, dense_payload_bytes, vmap_n
+
 from .error_feedback import ef_compress_step
 from .lmo import default_radius_scale, lmo_direction
+
+# Back-compat alias (gluon.py and external users import it from here).
+_vmap_n = vmap_n
 
 
 @dataclass(frozen=True)
@@ -75,68 +79,56 @@ class EF21MuonConfig:
     state_dtype: Any = jnp.float32
 
 
-def _slice_shape(shape: tuple[int, ...], stack_dims: int) -> tuple[int, ...]:
-    return tuple(shape[stack_dims:])
-
-
-def _resolve_compressor(name: str, slice_shape: tuple[int, ...]):
-    """Pick a compatible compressor for this leaf: rank-type compressors
-    need matrices; fall back to Natural for vectors (tiny anyway)."""
-    comp = get_compressor(name)
-    needs_2d = isinstance(comp, comp_lib.RankK) or (
-        isinstance(comp, comp_lib.WithNatural)
-        and isinstance(comp.inner, (comp_lib.RankK, comp_lib.TopKSVD)))
-    if needs_2d and len(slice_shape) != 2:
-        return get_compressor("natural") if "natural" in name else comp_lib.TopK(0.25)
-    return comp
-
-
-def _vmap_n(fn, n: int):
-    for _ in range(n):
-        fn = jax.vmap(fn)
-    return fn
+def _unzip(pairs: list, n: int) -> tuple[list, ...]:
+    return tuple(list(x) for x in zip(*pairs)) if pairs else tuple([] for _ in range(n))
 
 
 class EF21Muon:
     def __init__(self, cfg: EF21MuonConfig):
         self.cfg = cfg
+        self._plans: dict = {}
+
+    # ------------------------------------------------------------------ plan
+    def plan(self, params: Any, metas: Any) -> LayerPlan:
+        """The LayerPlan for this (treedef, metas, shapes) — cached, so
+        init, every traced step and the wire accounting share one plan."""
+        leaves, treedef = jax.tree.flatten(params)
+        metas_l = tuple(treedef.flatten_up_to(metas))
+        key = (treedef, tuple(tuple(p.shape) for p in leaves), metas_l)
+        if key not in self._plans:
+            if len(self._plans) >= 8:   # real trainers use one shape set;
+                self._plans.clear()     # bound the cache for shape sweeps
+            self._plans[key] = LayerPlan.build(
+                params, metas, w2s=self.cfg.w2s, s2w=self.cfg.s2w)
+        return self._plans[key]
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array, params: Any, metas: Any) -> dict:
         cfg = self.cfg
         sd = cfg.state_dtype
+        plan = self.plan(params, metas)
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params)
         g_w = jax.tree.map(
             lambda p: jnp.zeros((cfg.n_workers,) + p.shape, sd), params)
         m_w = None if cfg.beta >= 1.0 else jax.tree.map(
             lambda p: jnp.zeros((cfg.n_workers,) + p.shape, sd), params)
 
-        leaves, treedef = jax.tree.flatten(params)
-        metas_l = treedef.flatten_up_to(metas)
-        keys = jax.random.split(key, len(leaves) * (cfg.n_workers + 1))
-
+        n = len(plan.leaves)
+        keys = jax.random.split(key, n * (cfg.n_workers + 1))
         cw_states, cs_states = [], []
-        for i, (p, m) in enumerate(zip(leaves, metas_l)):
-            sshape = _slice_shape(p.shape, m.stack_dims)
-            wname = cfg.w2s if m.compressible else "identity"
-            wcomp = _resolve_compressor(wname, sshape)
-            scomp = _resolve_compressor(cfg.s2w if m.compressible else "identity", sshape)
-
-            def init_one(k, comp=wcomp, sshape=sshape):
-                return comp.init(k, sshape, jnp.dtype(cfg.wire_dtype))
-
-            stack = p.shape[:m.stack_dims]
-            n_stack = int(math.prod(stack)) if stack else 1
-            wkeys = jax.random.split(keys[i], cfg.n_workers * n_stack).reshape(
-                (cfg.n_workers,) + stack)
-            cw = _vmap_n(init_one, m.stack_dims + 1)(wkeys)
-            skeys = jax.random.split(keys[len(leaves) + i], max(n_stack, 1)
-                                     ).reshape(stack) \
-                if stack else keys[len(leaves) + i]
-            cs = _vmap_n(lambda k, comp=scomp, sshape=sshape: comp.init(
-                k, sshape, jnp.dtype(cfg.wire_dtype)), m.stack_dims)(skeys)
-            cw_states.append(cw)
-            cs_states.append(cs)
+        for i, lp in enumerate(plan.leaves):
+            wire = jnp.dtype(cfg.wire_dtype)
+            wkeys = jax.random.split(
+                keys[i], cfg.n_workers * lp.n_stack).reshape(
+                    (cfg.n_workers,) + lp.stack_shape)
+            cw_states.append(vmap_n(
+                lambda k, c=lp.w2s, s=lp.slice_shape: c.init(k, s, wire),
+                lp.meta.stack_dims + 1)(wkeys))
+            skeys = jax.random.split(keys[n + i], lp.n_stack).reshape(
+                lp.stack_shape) if lp.stack_shape else keys[n + i]
+            cs_states.append(vmap_n(
+                lambda k, c=lp.s2w, s=lp.slice_shape: c.init(k, s, wire),
+                lp.meta.stack_dims)(skeys))
 
         state = {
             "step": jnp.zeros((), jnp.int32),
@@ -144,30 +136,22 @@ class EF21Muon:
             "g_server": zeros,
             "g_w": g_w,
             "m_w": m_w,
-            "cw_state": treedef.unflatten(cw_states),
+            "cw_state": plan.unflatten(cw_states),
         }
         if cfg.s2w != "identity":
             state["w"] = jax.tree.map(lambda p: p.astype(sd), params)
-            state["cs_state"] = treedef.unflatten(cs_states)
+            state["cs_state"] = plan.unflatten(cs_states)
         return state
 
     # ------------------------------------------------------------ bookkeeping
     def w2s_bytes_per_worker(self, params: Any, metas: Any) -> int:
         """Static wire cost of one worker->server message (Table 2)."""
-        cfg = self.cfg
-        total = 0
-        for p, m in zip(jax.tree.leaves(params),
-                        jax.tree.flatten(params)[1].flatten_up_to(metas)):
-            sshape = _slice_shape(p.shape, m.stack_dims)
-            comp = _resolve_compressor(cfg.w2s if m.compressible else "identity",
-                                       sshape)
-            n_stack = int(math.prod(p.shape[:m.stack_dims])) if m.stack_dims else 1
-            total += n_stack * comp.payload_bytes(sshape, cfg.wire_dtype)
-        return total
+        return self.plan(params, metas).w2s_bytes_per_worker(
+            self.cfg.wire_dtype)
 
     def dense_bytes(self, params: Any) -> int:
-        return sum(int(math.prod(p.shape)) * jnp.dtype(self.cfg.wire_dtype).itemsize
-                   for p in jax.tree.leaves(params))
+        return dense_payload_bytes(
+            (p.shape for p in jax.tree.leaves(params)), self.cfg.wire_dtype)
 
     # The jit-friendly entry point: metas are static, so we build the step
     # function once per (metas, shapes) and let the caller jit it.
@@ -178,33 +162,19 @@ class EF21Muon:
 
         def step(state: dict, grad_and_loss: Callable, batch: Any,
                  t: jax.Array | float) -> tuple[dict, dict]:
-            treedef = jax.tree.structure(state["x"])
-            metas_l = treedef.flatten_up_to(metas)
+            plan = self.plan(state["x"], metas)
 
-            # ---- 1. EF21-P: workers' model estimate W
+            # ---- 1. EF21-P: workers' model estimate W (S = C_P(X - W))
             if cfg.s2w != "identity":
-                x_l = treedef.flatten_up_to(state["x"])
-                w_l = treedef.flatten_up_to(state["w"])
-                cs_l = treedef.flatten_up_to(state["cs_state"])
-                new_w, new_cs = [], []
-                for x, w, cs, m in zip(x_l, w_l, cs_l, metas_l):
-                    sshape = _slice_shape(x.shape, m.stack_dims)
-                    comp = _resolve_compressor(
-                        cfg.s2w if m.compressible else "identity", sshape)
-
-                    def one(cs, w, x, comp=comp):
-                        _, cs2, w2 = ef_compress_step(comp, cs, w, x,
-                                                      cfg.wire_dtype)
-                        return cs2, w2
-
-                    cs2, w2 = _vmap_n(one, m.stack_dims)(cs, w, x)
-                    new_w.append(w2)
-                    new_cs.append(cs2)
-                w_tree = treedef.unflatten(new_w)
-                cs_tree = treedef.unflatten(new_cs)
+                cs_l, w_l = _unzip(plan.map_flat(
+                    lambda lp, cs, w, x: ef_compress_step(
+                        lp.s2w, cs, w, x, cfg.wire_dtype)[1:],
+                    plan.flatten(state["cs_state"]),
+                    plan.flatten(state["w"]),
+                    plan.flatten(state["x"])), 2)
+                w_tree, cs_tree = plan.unflatten(w_l), plan.unflatten(cs_l)
             else:
-                w_tree = state["x"]
-                cs_tree = None
+                w_tree, cs_tree = state["x"], None
 
             # ---- 2. per-worker stochastic gradients at W (no cross-worker comm)
             w_cast = jax.tree.map(
@@ -212,7 +182,7 @@ class EF21Muon:
             losses, grads = jax.vmap(grad_and_loss, in_axes=(None, 0))(
                 w_cast, batch)
 
-            # ---- 3. momentum + EF21 per worker, layer-wise
+            # ---- 3. momentum + EF21 per worker: R_j = C_D(M_j - G_j)
             beta = cfg.beta
             if state["m_w"] is not None:
                 m_new = jax.tree.map(
@@ -224,64 +194,41 @@ class EF21Muon:
                 m_new = jax.tree.map(
                     lambda g: g.astype(cfg.state_dtype), grads)
 
-            g_w_l = treedef.flatten_up_to(state["g_w"])
-            m_l = treedef.flatten_up_to(m_new)
-            cw_l = treedef.flatten_up_to(state["cw_state"])
-
-            payloads, new_gw, new_cw = [], [], []
-            for gw, m, cw, meta in zip(g_w_l, m_l, cw_l, metas_l):
-                sshape = _slice_shape(gw.shape[1:], meta.stack_dims)
-                comp = _resolve_compressor(
-                    cfg.w2s if meta.compressible else "identity", sshape)
-
-                def one(cw, gw, m, comp=comp):
-                    payload, cw2, gw2 = ef_compress_step(comp, cw, gw, m,
-                                                         cfg.wire_dtype)
-                    return payload, cw2, gw2
-
-                payload, cw2, gw2 = _vmap_n(one, meta.stack_dims + 1)(cw, gw, m)
-                payloads.append(payload)
-                new_gw.append(gw2)
-                new_cw.append(cw2)
+            payloads, cw_l, gw_l = _unzip(plan.map_flat(
+                lambda lp, cw, gw, m: ef_compress_step(
+                    lp.w2s, cw, gw, m, cfg.wire_dtype),
+                plan.flatten(state["cw_state"]),
+                plan.flatten(state["g_w"]),
+                plan.flatten(m_new), extra_vmap=1), 3)
 
             # ---- 4. "server" receives payloads: gather across the worker
             # axis (trainer supplies the resharding hook), decompress, average.
             payloads = reshard_payloads(payloads)
-            g_s_l = treedef.flatten_up_to(state["g_server"])
-            new_gs = []
-            for gs, payload, meta in zip(g_s_l, payloads, metas_l):
-                sshape = _slice_shape(gs.shape, meta.stack_dims)
-                comp = _resolve_compressor(
-                    cfg.w2s if meta.compressible else "identity", sshape)
-
-                def dec(payload, comp=comp, sshape=sshape):
-                    return comp.decompress(payload, sshape, jnp.float32)
-
-                deltas = _vmap_n(dec, meta.stack_dims + 1)(payload)
-                new_gs.append((gs.astype(jnp.float32)
-                               + jnp.mean(deltas, axis=0)).astype(gs.dtype))
+            deltas = plan.map_flat(
+                lambda lp, pl: lp.w2s.decompress(
+                    pl, lp.slice_shape, jnp.float32),
+                payloads, extra_vmap=1)
+            gs_l = [(gs.astype(jnp.float32)
+                     + jnp.mean(d, axis=0)).astype(gs.dtype)
+                    for gs, d in zip(plan.flatten(state["g_server"]), deltas)]
 
             # ---- 5. layer-wise LMO step on the server iterate
-            x_l = treedef.flatten_up_to(state["x"])
-            new_x = []
-            for x, gs, meta in zip(x_l, new_gs, metas_l):
-                radius = jnp.asarray(t, jnp.float32) * meta.radius_scale
+            def lmo_leaf(lp, x, g):
+                d = lmo_direction(g, lp.meta.lmo, ns_steps=cfg.ns_steps,
+                                  use_pallas=cfg.use_pallas)
+                radius = jnp.asarray(t, jnp.float32) * lp.meta.radius_scale
+                return (x.astype(jnp.float32)
+                        + radius * d.astype(jnp.float32)).astype(x.dtype)
 
-                def upd(x, g, meta=meta, radius=radius):
-                    d = lmo_direction(g, meta.lmo, ns_steps=cfg.ns_steps,
-                                      use_pallas=cfg.use_pallas)
-                    return (x.astype(jnp.float32)
-                            + radius * d.astype(jnp.float32)).astype(x.dtype)
-
-                new_x.append(_vmap_n(upd, meta.stack_dims)(x, gs))
+            x_l = plan.map_flat(lmo_leaf, plan.flatten(state["x"]), gs_l)
 
             new_state = {
                 "step": state["step"] + 1,
-                "x": treedef.unflatten(new_x),
-                "g_server": treedef.unflatten(new_gs),
-                "g_w": treedef.unflatten(new_gw),
+                "x": plan.unflatten(x_l),
+                "g_server": plan.unflatten(gs_l),
+                "g_w": plan.unflatten(gw_l),
                 "m_w": m_new if state["m_w"] is not None else None,
-                "cw_state": treedef.unflatten(new_cw),
+                "cw_state": plan.unflatten(cw_l),
             }
             if cfg.s2w != "identity":
                 new_state["w"] = w_tree
@@ -289,7 +236,7 @@ class EF21Muon:
             aux = {"loss": jnp.mean(losses),
                    "grad_est_norm": jnp.sqrt(sum(
                        jnp.sum(jnp.square(g.astype(jnp.float32)))
-                       for g in new_gs))}
+                       for g in gs_l))}
             return new_state, aux
 
         return step

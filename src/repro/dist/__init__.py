@@ -1,0 +1,11 @@
+# Distribution layer: mesh partition rules + layer-wise optimizer plumbing.
+from .layerwise import LayerPlan, LeafPlan, resolve_compressor, vmap_n
+from .sharding import (batch_pspec, n_workers_for, param_pspec, param_pspecs,
+                       serve_pspecs, state_pspecs, to_shardings,
+                       worker_axis_for)
+
+__all__ = [
+    "LayerPlan", "LeafPlan", "resolve_compressor", "vmap_n",
+    "param_pspec", "param_pspecs", "state_pspecs", "batch_pspec",
+    "serve_pspecs", "to_shardings", "worker_axis_for", "n_workers_for",
+]

@@ -1,0 +1,143 @@
+"""Layer-wise tree plumbing for the EF21-Muon optimizer.
+
+The optimizer is layer-wise by construction: every phase of a step
+(EF21-P model shift, worker EF21 compression, server decompression, the
+LMO update) is "for each parameter leaf: resolve its compressor, strip
+its stack dims, vmap a per-slice function". A ``LayerPlan`` precomputes
+all of that once per (treedef, metas, shapes) so the optimizer states
+algorithm steps instead of tree mechanics:
+
+    plan = LayerPlan.build(params, metas, w2s="rank10", s2w="natural")
+    new_x = plan.map_leaves(lmo_leaf, x_tree, g_tree)          # stack-vmapped
+    outs  = plan.map_flat(ef_leaf, cw_l, gw_l, m_l, extra_vmap=1)  # + worker dim
+
+Compressor resolution rule (deterministic, documented here once):
+rank-type compressors (RankK, TopKSVD — with or without a Natural
+wrapper) need a matrix slice; on a non-2D slice they fall back to
+``TopK(0.25)``, keeping the Natural wrapper if one was requested. Such
+leaves are vectors/scalars and contribute negligible wire bytes, so the
+fallback fraction is not performance-relevant — but it is deterministic
+and independent of the compressor *name*, unlike string sniffing.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def vmap_n(fn: Callable, n: int) -> Callable:
+    """vmap ``fn`` over the ``n`` leading (stack) dims of its args."""
+    for _ in range(n):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def resolve_compressor(name: str, slice_shape: tuple[int, ...]):
+    """Instantiate the compressor for one leaf slice (see module
+    docstring for the non-2D fallback rule)."""
+    # Deferred import: repro.core.muon (pulled in by repro.core.__init__)
+    # imports this module, so a top-level core import would be circular.
+    from repro.core import compressors as comp_lib
+
+    comp = comp_lib.get_compressor(name)
+    inner = comp.inner if isinstance(comp, comp_lib.WithNatural) else comp
+    if isinstance(inner, (comp_lib.RankK, comp_lib.TopKSVD)) \
+            and len(slice_shape) != 2:
+        fallback = comp_lib.TopK(0.25)
+        if isinstance(comp, comp_lib.WithNatural):
+            return comp_lib.WithNatural(fallback)
+        return fallback
+    return comp
+
+
+@dataclass(frozen=True)
+class LeafPlan:
+    """Everything static about one parameter leaf."""
+    meta: Any                       # ParamMeta-like
+    shape: tuple[int, ...]          # full leaf shape (no worker dim)
+    stack_shape: tuple[int, ...]    # leading stack dims
+    slice_shape: tuple[int, ...]    # per-layer operand the LMO/compressor sees
+    n_stack: int                    # prod(stack_shape)
+    w2s: Any                        # resolved worker->server compressor
+    s2w: Any                        # resolved server->worker compressor
+
+
+class LayerPlan:
+    """Per-(treedef, metas, shapes) plan shared by every optimizer phase."""
+
+    def __init__(self, treedef, leaves: list[LeafPlan]):
+        self.treedef = treedef
+        self.leaves = leaves
+
+    @classmethod
+    def build(cls, params: Any, metas: Any, w2s: str = "identity",
+              s2w: str = "identity") -> "LayerPlan":
+        """``params`` may be concrete arrays, ShapeDtypeStructs or
+        tracers — only ``.shape`` is read. ``metas`` mirrors the params
+        tree with ParamMeta leaves; incompressible leaves get identity
+        compressors in both directions."""
+        leaves, treedef = jax.tree.flatten(params)
+        metas_l = treedef.flatten_up_to(metas)
+        plans = []
+        for p, m in zip(leaves, metas_l):
+            shape = tuple(p.shape)
+            stack = shape[:m.stack_dims]
+            sshape = shape[m.stack_dims:]
+            wname = w2s if m.compressible else "identity"
+            sname = s2w if m.compressible else "identity"
+            plans.append(LeafPlan(
+                meta=m, shape=shape, stack_shape=stack, slice_shape=sshape,
+                n_stack=int(math.prod(stack)) if stack else 1,
+                w2s=resolve_compressor(wname, sshape),
+                s2w=resolve_compressor(sname, sshape)))
+        return cls(treedef, plans)
+
+    # ------------------------------------------------------------- tree ops
+    def flatten(self, tree: Any) -> list:
+        return self.treedef.flatten_up_to(tree)
+
+    def unflatten(self, leaves: list) -> Any:
+        return self.treedef.unflatten(leaves)
+
+    def map_flat(self, fn: Callable, *flat: list, extra_vmap: int = 0) -> list:
+        """``fn(leaf_plan, *slices)`` applied per leaf, vmapped over the
+        leaf's stack dims plus ``extra_vmap`` extra leading dims (e.g. 1
+        for the worker dimension). Inputs and output are flat lists in
+        treedef order; tuple-valued ``fn`` results stay zipped per leaf."""
+        out = []
+        for lp, *xs in zip(self.leaves, *flat):
+            out.append(vmap_n(partial(fn, lp),
+                              lp.meta.stack_dims + extra_vmap)(*xs))
+        return out
+
+    def map_leaves(self, fn: Callable, *trees: Any,
+                   extra_vmap: int = 0) -> Any:
+        """Tree-in/tree-out version of ``map_flat``."""
+        return self.unflatten(self.map_flat(
+            fn, *[self.flatten(t) for t in trees], extra_vmap=extra_vmap))
+
+    # ------------------------------------------------------ wire accounting
+    def w2s_bytes_per_worker(self, wire_dtype) -> int:
+        """Static bytes of one worker->server message (Table 2): the sum
+        over leaves of stack-count x per-slice payload bytes. The single
+        source of truth for wire accounting — the CLI and benchmarks read
+        from here."""
+        return sum(lp.n_stack * lp.w2s.payload_bytes(lp.slice_shape, wire_dtype)
+                   for lp in self.leaves)
+
+    def dense_bytes(self, wire_dtype) -> int:
+        """Uncompressed wire cost of the same message."""
+        return dense_payload_bytes((lp.shape for lp in self.leaves),
+                                   wire_dtype)
+
+
+def dense_payload_bytes(shapes, wire_dtype) -> int:
+    """Wire bytes of an uncompressed message over the given leaf shapes —
+    the one dense-accounting rule (LayerPlan and EF21Muon both call it)."""
+    itemsize = jnp.dtype(wire_dtype).itemsize
+    return sum(int(math.prod(s)) * itemsize for s in shapes)

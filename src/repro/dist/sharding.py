@@ -1,0 +1,233 @@
+"""Mesh partition rules for EF21-Muon training and serving (DESIGN.md §3).
+
+One home for every placement decision in the repo: the trainer, the
+serving engine and the multi-pod dry-run all derive their shardings from
+these functions instead of hand-rolling per-leaf PartitionSpecs.
+
+Worker <-> mesh mapping (DESIGN.md §3): EF21 workers are the slow-link
+domains of the mesh — pods on a multi-pod mesh, the data-parallel groups
+on a single pod. ``worker_axis_for`` names that axis; arrays with a
+leading worker dimension (per-worker gradients ``g_w``, momentum ``m_w``,
+train batches, w2s payloads) are sharded over it, so the payload
+all-gather in the lowered HLO crosses exactly the slow links and nothing
+else.
+
+Parameter rule (``param_pspec``):
+  * tensor parallelism shards the *last* core dim divisible by the
+    ``model`` axis (falling back to earlier dims);
+  * stacks with ``stack_dims >= 2`` (routed experts ``[L, E, ...]``) are
+    expert-parallel: the expert dim goes on ``model`` when divisible;
+  * FSDP additionally shards one remaining divisible dim over ``data``;
+  * vectors (core rank < 2) are replicated — they are tiny.
+
+All spec builders only read ``mesh.shape`` / ``mesh.axis_names`` so they
+work with shape-only mesh stand-ins (tests) and real meshes alike; only
+``to_shardings`` needs a live ``jax.sharding.Mesh``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def worker_axis_for(mesh) -> str:
+    """Mesh axis that carries the EF21 worker dimension: ``pod`` on a
+    multi-pod mesh, else ``data`` (DESIGN.md §3)."""
+    return "pod" if "pod" in mesh.axis_names else "data"
+
+
+def n_workers_for(mesh) -> int:
+    """EF21 workers = slow-link domains: pods on a multi-pod mesh, the
+    data-parallel groups on a single pod (DESIGN.md §3)."""
+    return mesh.shape[worker_axis_for(mesh)]
+
+
+def param_pspec(meta, shape: tuple[int, ...], mesh, fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``meta`` is ParamMeta-like (reads ``stack_dims`` only). See the module
+    docstring for the rule; the leading ``stack_dims`` dims are the
+    layer/expert stack, the rest is the core operand.
+    """
+    model_n = mesh.shape.get("model", 1)
+    data_n = mesh.shape.get("data", 1)
+    nd = len(shape)
+    sd = min(meta.stack_dims, nd)
+    axes: list[str | None] = [None] * nd
+    core = shape[sd:]
+    if len(core) < 2:
+        return P(*axes)  # vectors (and scalars) replicated
+
+    if model_n > 1:
+        if sd >= 2 and shape[sd - 1] % model_n == 0:
+            axes[sd - 1] = "model"        # expert parallelism on [L, E, ...]
+        else:
+            for i in range(nd - 1, sd - 1, -1):
+                if shape[i] % model_n == 0:
+                    axes[i] = "model"     # TP on last divisible core dim
+                    break
+    if fsdp and data_n > 1:
+        for i in range(nd - 1, -1, -1):
+            if axes[i] is None and shape[i] % data_n == 0:
+                axes[i] = "data"
+                break
+    return P(*axes)
+
+
+def param_pspecs(params: Any, metas: Any, mesh, fsdp: bool = False) -> Any:
+    """``param_pspec`` over a whole params tree (``metas`` mirrors it);
+    the one place the tree assembly lives — serving and the dry-run both
+    call here."""
+    treedef = jax.tree.structure(params)
+    metas_l = treedef.flatten_up_to(metas)
+    return treedef.unflatten(
+        [param_pspec(m, p.shape, mesh, fsdp=fsdp)
+         for p, m in zip(treedef.flatten_up_to(params), metas_l)])
+
+
+def _worker_pspec(meta, shape: tuple[int, ...], mesh, fsdp: bool) -> P:
+    """Spec for a leaf with a leading worker dim ((n_workers,) + param)."""
+    waxis = worker_axis_for(mesh)
+    inner = list(param_pspec(meta, shape[1:], mesh, fsdp=fsdp))
+    lead = waxis if mesh.shape.get(waxis, 1) > 1 \
+        and shape[0] % mesh.shape[waxis] == 0 else None
+    if lead is not None and lead in inner:
+        # an axis can appear once per spec: the worker dim wins, the
+        # FSDP/TP use of the same axis on this leaf is dropped
+        inner[inner.index(lead)] = None
+    return P(lead, *inner)
+
+
+def _zero1_pspec(meta, shape: tuple[int, ...], mesh, fsdp: bool) -> P:
+    """Beyond-paper ZeRO-1-style layer-parallel LMO rule: shard the
+    leading layer-stack dim of the *server* state (``x``, ``g_server``,
+    ``w``) over ``data`` when divisible, so each data group runs the LMO
+    for its own layer shard. Never applied to worker-dim leaves
+    (``g_w``/``m_w``) — their leading dim already lives on the worker
+    axis."""
+    spec = param_pspec(meta, shape, mesh, fsdp=fsdp)
+    data_n = mesh.shape.get("data", 1)
+    if (meta.stack_dims >= 1 and data_n > 1 and len(shape) >= 1
+            and shape[0] % data_n == 0
+            and spec[0] is None and "data" not in spec):
+        spec = P("data", *tuple(spec)[1:])
+    return spec
+
+
+def state_pspecs(state: dict, params: Any, metas: Any, mesh,
+                 fsdp: bool = False, zero1_lmo: bool = False) -> dict:
+    """PartitionSpecs for the full EF21-Muon optimizer state.
+
+    * ``x`` / ``g_server`` / ``w``: the parameter rule (plus the zero-1
+      layer-parallel rule when ``zero1_lmo``);
+    * ``g_w`` / ``m_w``: leading worker dim on ``worker_axis_for(mesh)``,
+      remaining dims follow the parameter rule;
+    * ``step``: replicated; compressor states and anything else:
+      replicated (they are sketches / PRNG keys, small by construction).
+
+    Only leaf ``.shape`` attributes are read, so abstract states
+    (ShapeDtypeStruct / eval_shape output) work.
+    """
+    treedef = jax.tree.structure(params)
+    metas_l = treedef.flatten_up_to(metas)
+
+    def map_like(tree, leaf_fn):
+        leaves = treedef.flatten_up_to(tree)
+        return treedef.unflatten(
+            [leaf_fn(m, x.shape) for x, m in zip(leaves, metas_l)])
+
+    out = {}
+    for k, v in state.items():
+        if v is None:
+            out[k] = None
+        elif k in ("x", "g_server", "w"):
+            rule = _zero1_pspec if zero1_lmo else param_pspec
+            out[k] = map_like(v, lambda m, s: rule(m, s, mesh, fsdp))
+        elif k in ("g_w", "m_w"):
+            out[k] = map_like(v, lambda m, s: _worker_pspec(m, s, mesh, fsdp))
+        elif k == "step":
+            out[k] = P()
+        else:  # cw_state / cs_state / future additions: replicate
+            out[k] = jax.tree.map(lambda leaf: P(), v)
+    return out
+
+
+def batch_pspec(batch: Any, mesh, kind: str) -> Any:
+    """Input batch specs. Train batches carry ``[n_workers, per_worker,
+    ...]`` leading dims: workers go on the worker axis, and on a
+    multi-pod mesh the per-worker batch additionally shards over
+    ``data``. Prefill/decode batches shard their leading batch dim over
+    ``data``."""
+    waxis = worker_axis_for(mesh)
+    data_n = mesh.shape.get("data", 1)
+
+    def one(x):
+        shape = x.shape
+        axes: list[str | None] = [None] * len(shape)
+        if not shape:
+            return P()
+        if kind == "train":
+            if mesh.shape.get(waxis, 1) > 1 and shape[0] % mesh.shape[waxis] == 0:
+                axes[0] = waxis
+            if waxis == "pod" and len(shape) > 1 and data_n > 1 \
+                    and shape[1] % data_n == 0:
+                axes[1] = "data"
+        elif data_n > 1 and shape[0] % data_n == 0:
+            axes[0] = "data"
+        return P(*axes)
+
+    return jax.tree.map(one, batch)
+
+
+def serve_pspecs(cache: Any, batch: int, mesh, cache_alt: Any = None) -> Any:
+    """Decode-cache specs: the batch dim shards over ``data``; the
+    sequence dim — the largest remaining dim divisible by the ``model``
+    axis — shards over ``model`` (long caches are the serving memory
+    bottleneck). Everything else is replicated.
+
+    Cache layouts differ per model family (transformers stack
+    ``[L, B, ...]``, recurrent families nest batch deeper), so the batch
+    dim is found exactly when ``cache_alt`` — the same cache tree built
+    at any *other* batch size (e.g. ``model.cache_spec(batch + 1, len)``)
+    — is given: it is the dim where the shapes differ. Without it, a
+    size-match heuristic biased to the transformer ``[L, B, ...]`` layout
+    is used."""
+    model_n = mesh.shape.get("model", 1)
+    data_n = mesh.shape.get("data", 1)
+
+    def one(x, alt=None):
+        shape = x.shape
+        axes: list[str | None] = [None] * len(shape)
+        if alt is not None:
+            diff = [i for i, (s, t) in enumerate(zip(shape, alt.shape))
+                    if s != t]
+            b_i = diff[0] if diff else None
+        else:
+            cand = [i for i, s in enumerate(shape) if s == batch]
+            b_i = cand[0] if cand else None
+            if cand[:2] == [0, 1] and len(shape) >= 3:
+                # [n_layers, batch, ...] with n_layers == batch: prefer
+                # the conventional batch position — but only dim 1; a
+                # later same-size dim (a square [B, T, B] state) does not
+                # displace a genuine batch at dim 0
+                b_i = 1
+        if b_i is not None and data_n > 1 and batch % data_n == 0:
+            axes[b_i] = "data"
+        cand = [(s, i) for i, s in enumerate(shape)
+                if axes[i] is None and model_n > 1 and s > 1
+                and s % model_n == 0]
+        if cand:
+            axes[max(cand)[1]] = "model"
+        return P(*axes)
+
+    if cache_alt is not None:
+        return jax.tree.map(one, cache, cache_alt)
+    return jax.tree.map(one, cache)
+
+
+def to_shardings(specs: Any, mesh) -> Any:
+    """Materialise a tree of PartitionSpecs into NamedShardings."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

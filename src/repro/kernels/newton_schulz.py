@@ -28,6 +28,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed across jax versions: TPUCompilerParams (<=0.4.x) -> CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _fused_matmul_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, nk: int,
                          alpha: float, beta: float, has_c: bool):
@@ -83,7 +87,7 @@ def fused_matmul(a: jax.Array, b: jax.Array, c: jax.Array | None = None,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -34,11 +34,12 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config
-from repro.dist.sharding import (batch_pspec, param_pspec, serve_pspecs,
-                                 to_shardings)
+from repro.dist import (batch_pspec, n_workers_for, param_pspecs,
+                        serve_pspecs, to_shardings)
 from repro.launch.hlo_analysis import roofline_terms
-from repro.launch.hlo_cost import analyze
-from repro.launch.mesh import make_production_mesh, n_workers_for
+from repro.launch.hlo_cost import analyze, cost_analysis_dict
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import abstract_params as _abstract_params
 from repro.models.api import build_model, input_specs
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -47,18 +48,6 @@ RESULTS = os.path.join(os.path.dirname(__file__), "../../..",
 RESULTS = os.path.abspath(RESULTS)
 
 FSDP_THRESHOLD = 8e9   # params above this get FSDP over the data axis
-
-
-def _abstract_params(model):
-    box = {}
-
-    def initp(k):
-        p, m = model.init(k)
-        box["metas"] = m
-        return p
-
-    shapes = jax.eval_shape(initp, jax.random.key(0))
-    return shapes, box["metas"]
 
 
 def _param_counts(cfg, shapes, metas):
@@ -131,12 +120,13 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         lowered = jitted.lower(state, batch,
                                jax.ShapeDtypeStruct((), jnp.float32))
     else:
-        psec = jax.tree.map(
-            lambda s, m: param_pspec(m, s.shape, mesh, fsdp=use_fsdp),
-            pshapes, metas)
-        p_sh = to_shardings(psec, mesh)
+        p_sh = to_shardings(param_pspecs(pshapes, metas, mesh,
+                                         fsdp=use_fsdp), mesh)
         cache = model.cache_spec(shape.batch, shape.seq)
-        c_sh = to_shardings(serve_pspecs(cache, shape.batch, mesh), mesh)
+        c_sh = to_shardings(
+            serve_pspecs(cache, shape.batch, mesh,
+                         cache_alt=model.cache_spec(shape.batch + 1,
+                                                    shape.seq)), mesh)
         batch = input_specs(cfg, shape)
         b_sh = to_shardings(batch_pspec(batch, mesh, shape.kind), mesh)
         fn = model.prefill if shape.kind == "prefill" else model.decode_step
@@ -154,7 +144,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     cost = analyze(hlo_text)
     flops = float(cost["flops"])
     bytes_acc = float(cost["hbm_bytes"])
-    xla_cost = compiled.cost_analysis() or {}
+    xla_cost = cost_analysis_dict(compiled)
     try:
         ma = compiled.memory_analysis()
         mem = {"argument_bytes": int(ma.argument_size_in_bytes),

@@ -97,6 +97,17 @@ _CALLED = re.compile(r"(?:calls|to_apply|body)=(%?[\w.\-]+)")
 _COND = re.compile(r"condition=(%?[\w.\-]+)")
 
 
+def _operand_name(o: str) -> str:
+    """Reference name of one operand. Depending on XLA version the text
+    form is either bare (``%foo.1``) or typed
+    (``f32[1,2]{1,0} %foo.1``); take the trailing %-token."""
+    toks = o.split()
+    for t in reversed(toks):
+        if t.startswith("%"):
+            return t.lstrip("%")
+    return toks[-1].lstrip("%") if toks else o
+
+
 def _split_top(s: str) -> list[str]:
     """Split an operand list at depth 0 commas."""
     out, depth, cur = [], 0, []
@@ -158,7 +169,7 @@ def parse_module(text: str) -> dict[str, Computation]:
                     end = i
                     break
                 depth -= 1
-        ops = [o.strip().lstrip("%") for o in _split_top(rest[:end])
+        ops = [_operand_name(o.strip()) for o in _split_top(rest[:end])
                if o.strip()]
         attrs = rest[end + 1:]
         e, b = _shape_elems_bytes(type_str)
@@ -238,6 +249,15 @@ class Cost:
         self.coll_bytes += scale * other.coll_bytes
         for k, v in other.coll_by_kind.items():
             self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + scale * v
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalised across jax versions
+    (older versions return list[dict], newer a dict)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def analyze(text: str) -> dict:

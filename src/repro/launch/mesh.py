@@ -8,10 +8,15 @@ touches jax device state. The dry-run process must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import (see dryrun.py); real launches get the mesh from the slice
 topology.
+
+Partition logic lives in ``repro.dist``; ``n_workers_for`` is re-exported
+here for backwards compatibility with pre-dist callers.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.dist.sharding import n_workers_for  # noqa: F401  (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -29,10 +34,3 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             f"for the dry-run")
     import numpy as np
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
-
-
-def n_workers_for(mesh: jax.sharding.Mesh) -> int:
-    """EF21 workers = slow-link domains: pods on a multi-pod mesh, the
-    data-parallel groups on a single pod (DESIGN.md §3)."""
-    return mesh.shape["pod"] if "pod" in mesh.axis_names \
-        else mesh.shape["data"]

@@ -59,8 +59,10 @@ def main():
         print(f"resumed from {args.resume} @ step {start}")
     step_fn = jax.jit(tr.make_step())
     sched = warmup_linear_decay(args.radius, args.warmup, args.steps)
-    wire = tr.opt.w2s_bytes_per_worker(state["x"], tr.metas)
-    dense = tr.opt.dense_bytes(state["x"])
+    # wire accounting straight from the LayerPlan (Table 2 source of truth)
+    plan = tr.layer_plan()
+    wire = plan.w2s_bytes_per_worker(tr.opt.cfg.wire_dtype)
+    dense = plan.dense_bytes(tr.opt.cfg.wire_dtype)
     print(f"arch={cfg.name} params="
           f"{sum(p.size for p in jax.tree.leaves(state['x']))} "
           f"w2s_bytes/worker={wire} ({wire / dense:.3f} of dense)")

@@ -47,6 +47,22 @@ def build_model(cfg: ArchConfig):
     raise ValueError(f"unknown family {cfg.family}")
 
 
+def abstract_params(model) -> tuple:
+    """(param ShapeDtypeStructs, metas) from ``model.init`` without
+    allocating. ParamMeta is not a JAX type, so it is captured via
+    closure; the one place this idiom lives (trainer, serving and the
+    dry-run all call here)."""
+    box = {}
+
+    def initp(k):
+        p, m = model.init(k)
+        box["metas"] = m
+        return p
+
+    shapes = jax.eval_shape(initp, jax.random.key(0))
+    return shapes, box["metas"]
+
+
 def _dt(cfg: ArchConfig):
     return jnp.dtype(cfg.dtype)
 

@@ -1,10 +1,16 @@
 """Serving driver: batched prefill + greedy/temperature decode loop.
 
-``Server`` wraps a model with jitted prefill/decode_step functions (with
-mesh shardings when provided) and a simple continuous-batching-style
-``generate`` that runs prefill once and then steps the decoder; this is
-the engine behind examples/serve_batched.py and the decode dry-run entry
-points.
+``Server`` wraps a model with jitted prefill/decode_step functions and a
+simple continuous-batching-style ``generate`` that runs prefill once and
+then steps the decoder; this is the engine behind
+examples/serve_batched.py and the decode dry-run entry points.
+
+When a mesh is provided, all placement comes from ``repro.dist``: params
+follow ``param_pspec`` (TP/expert-parallel), the KV/recurrent cache
+follows ``serve_pspecs`` (batch over ``data``, sequence over ``model``)
+and inputs follow ``batch_pspec`` — ``generate`` places its operands
+before the first jitted call, so the same driver runs single-host and
+SPMD unchanged.
 """
 from __future__ import annotations
 
@@ -14,10 +20,10 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.dist.sharding import batch_pspec, param_pspec, serve_pspecs, \
-    to_shardings
+from repro.dist.sharding import (batch_pspec, param_pspecs, serve_pspecs,
+                                 to_shardings)
 
 
 @dataclass
@@ -28,19 +34,80 @@ class Server:
     def __post_init__(self):
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step)
+        self._metas = None
+        if self.mesh is not None:
+            from repro.models.api import abstract_params
+            _, self._metas = abstract_params(self.model)
 
     # The serve_step the decode-shape dry-runs lower: ONE token against a
     # seq_len cache.
     def serve_step_fn(self):
         return self.model.decode_step
 
+    # ------------------------------------------------------------ placement
+    def shardings(self, params: Any, batch: dict, cache: Any,
+                  cache_alt: Any = None):
+        """(param, batch, cache) NamedShardings from the dist rules.
+        ``cache_alt`` (the cache spec at another batch size) makes the
+        batch-dim detection exact — see ``serve_pspecs``."""
+        assert self.mesh is not None
+        bsz = next(iter(batch.values())).shape[0]
+        return (to_shardings(param_pspecs(params, self._metas, self.mesh),
+                             self.mesh),
+                to_shardings(batch_pspec(batch, self.mesh, "prefill"),
+                             self.mesh),
+                to_shardings(serve_pspecs(cache, bsz, self.mesh,
+                                          cache_alt=cache_alt), self.mesh))
+
+    def _placed(self, params, p_sh):
+        # one-slot placed-params cache: a long-lived server calls generate
+        # repeatedly with the same weights — don't re-scatter them per
+        # call. The entry keeps strong refs to the source leaves and
+        # compares by identity (JAX arrays are immutable, so any weight
+        # swap replaces leaves and misses; the kept refs mean CPython can
+        # never recycle their ids while the entry is live).
+        leaves = jax.tree.leaves(params)
+        cached = getattr(self, "_placed_params", None)
+        if (cached is None or len(cached[0]) != len(leaves)
+                or any(a is not b for a, b in zip(cached[0], leaves))):
+            cached = (leaves, jax.device_put(params, p_sh))
+            self._placed_params = cached
+        return cached[1]
+
+    # -------------------------------------------------------------- decoding
     def generate(self, params, batch: dict, max_new: int,
                  temperature: float = 0.0, key: jax.Array | None = None):
         """Prefill on ``batch`` then decode ``max_new`` tokens."""
         bsz = next(iter(batch.values())).shape[0]
         prompt_len = (batch["tokens"].shape[1] if "tokens" in batch
                       else batch["embeds"].shape[1])
-        cache = self.model.init_cache(bsz, prompt_len + max_new)
+        total = prompt_len + max_new
+        if self.mesh is not None:
+            # per-request-shape placement memo: shardings are a function
+            # of (bsz, prompt_len, total, modality) only, and the jitted cache init
+            # builds the cache directly under its target sharding — the
+            # cache is the serving memory bottleneck, so it must never be
+            # materialised unsharded on one device first. Bounded like the
+            # optimizer's plan cache; real servers see a few shapes.
+            memo = getattr(self, "_placement_memo", None)
+            if memo is None:
+                memo = self._placement_memo = {}
+            mkey = (bsz, prompt_len, total, tuple(sorted(batch)))
+            if mkey not in memo:
+                if len(memo) >= 8:
+                    memo.clear()
+                p_sh, b_sh, c_sh = self.shardings(
+                    params, batch, self.model.cache_spec(bsz, total),
+                    cache_alt=self.model.cache_spec(bsz + 1, total))
+                memo[mkey] = (p_sh, b_sh, jax.jit(
+                    partial(self.model.init_cache, bsz, total),
+                    out_shardings=c_sh))
+            p_sh, b_sh, init_cache = memo[mkey]
+            params = self._placed(params, p_sh)
+            batch = jax.device_put(batch, b_sh)
+            cache = init_cache()
+        else:
+            cache = self.model.init_cache(bsz, total)
         logits, cache = self._prefill(params, batch, cache)
         toks = []
         tok = self._sample(logits, temperature, key, 0)
@@ -52,6 +119,8 @@ class Server:
                 cache)
             key = jax.random.fold_in(key, i) if key is not None else None
             tok = self._sample(logits, temperature, key, i + 1)
+        if not toks:   # max_new=0: prefill-only warmup
+            return jnp.zeros((bsz, 0), jnp.int32)
         return jnp.concatenate(toks, axis=1)
 
     @staticmethod

@@ -58,16 +58,8 @@ class Trainer:
             s2w=tcfg.s2w, ns_steps=tcfg.ns_steps,
             use_pallas=tcfg.use_pallas))
         # metas are static: build once from the model's abstract init
-        # (ParamMeta is not a JAX type, so capture it via closure)
-        box = {}
-
-        def init_params(k):
-            p, m = model.init(k)
-            box["metas"] = m
-            return p
-
-        self._params_shapes = jax.eval_shape(init_params, jax.random.key(0))
-        self.metas = box["metas"]
+        from repro.models.api import abstract_params
+        self._params_shapes, self.metas = abstract_params(model)
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> dict:
@@ -79,6 +71,11 @@ class Trainer:
         return jax.eval_shape(
             lambda k, p: self.opt.init(k, p, self.metas),
             jax.random.key(0), self._params_shapes)
+
+    def layer_plan(self):
+        """The optimizer's LayerPlan for this model — the one source of
+        truth for per-leaf compressors and w2s wire bytes (Table 2)."""
+        return self.opt.plan(self._params_shapes, self.metas)
 
     # --------------------------------------------------------------- specs
     def shardings(self, batch_shapes: Any):
@@ -101,13 +98,21 @@ class Trainer:
     def make_step(self) -> Callable:
         """Returns step(state, batch, t) -> (state, aux). jit outside."""
         if self.mesh is not None:
+            waxis = worker_axis_for(self.mesh)
+            wn = self.mesh.shape[waxis]
+            sharded = NamedSharding(self.mesh, P(waxis))
             replicated = NamedSharding(self.mesh, P())
 
             def reshard(payloads):
-                # w2s communication: all-gather of compressed payloads only
-                return jax.tree.map(
-                    lambda x: jax.lax.with_sharding_constraint(x, replicated),
-                    payloads)
+                # w2s communication: payloads live on the worker axis
+                # (leading dim), then replicate == all-gather of compressed
+                # payload bytes over exactly the slow links (DESIGN.md §3).
+                def one(x):
+                    if x.ndim and x.shape[0] % wn == 0:
+                        x = jax.lax.with_sharding_constraint(x, sharded)
+                    return jax.lax.with_sharding_constraint(x, replicated)
+
+                return jax.tree.map(one, payloads)
         else:
             reshard = lambda tree: tree
 

@@ -7,6 +7,7 @@ of quadratics, while the EF21 mechanism converges.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.compressors import TopK, get_compressor
 from repro.core.error_feedback import apply_payload, ef_compress_step
@@ -92,6 +93,71 @@ def test_biased_compression_without_ef_fails(key):
     assert gn_ef < 1e-3, f"EF21 should converge, got grad norm {gn_ef}"
     assert gn_naive > 10 * gn_ef, \
         f"naive compression should stall: {gn_naive} vs {gn_ef}"
+
+
+@pytest.mark.parametrize("name", ["identity", "natural", "top10",
+                                  "top10+natural", "rank10",
+                                  "rank10+natural"])
+def test_apply_payload_matches_sender_estimate(name, key):
+    """§2 invariant: the receiver's ``apply_payload(comp, payload, E)``
+    must be *bit-identical* to the ``new_estimate`` the sender computed in
+    ``ef_compress_step`` — the whole point of transmitting C(T - E) is
+    that both sides advance E by the exact same decompressed message."""
+    comp = get_compressor(name)
+    shape = (24, 16)
+    target = jax.random.normal(key, shape, jnp.float32)
+    est_send = jnp.zeros(shape, jnp.float32)
+    est_recv = jnp.zeros(shape, jnp.float32)
+    state = comp.init(key, shape, jnp.dtype(jnp.bfloat16))
+    for i in range(4):
+        payload, state, est_send = ef_compress_step(comp, state, est_send,
+                                                    target)
+        est_recv = apply_payload(comp, payload, est_recv)
+        np.testing.assert_array_equal(np.asarray(est_send),
+                                      np.asarray(est_recv))
+
+
+@pytest.mark.parametrize("name", ["top10", "rank10", "natural"])
+def test_apply_payload_matches_sender_on_stacked_leaf(name, key):
+    """Same invariant on a stacked leaf [L, m, n]: both sides vmapped over
+    the stack dim, exactly as LayerPlan drives the optimizer phases."""
+    L, shape = 3, (12, 8)
+    target = jax.random.normal(key, (L,) + shape, jnp.float32)
+    comp = get_compressor(name)
+    keys = jax.random.split(key, L)
+    state = jax.vmap(
+        lambda k: comp.init(k, shape, jnp.dtype(jnp.bfloat16)))(keys)
+    est_send = jnp.zeros((L,) + shape, jnp.float32)
+    est_recv = jnp.zeros((L,) + shape, jnp.float32)
+
+    def send(cs, e, t):
+        return ef_compress_step(comp, cs, e, t)
+
+    def recv(pl, e):
+        return apply_payload(comp, pl, e)
+
+    for i in range(3):
+        payload, state, est_send = jax.vmap(send)(state, est_send, target)
+        est_recv = jax.vmap(recv)(payload, est_recv)
+        np.testing.assert_array_equal(np.asarray(est_send),
+                                      np.asarray(est_recv))
+
+
+def test_rank_fallback_is_deterministic_and_wrapped():
+    """The documented resolve rule: rank-type compressors on non-2D
+    slices fall back to TopK(0.25), preserving a requested Natural
+    wrapper — never silently switching compression family by name."""
+    from repro.core import compressors as C
+    from repro.dist.layerwise import resolve_compressor
+
+    assert isinstance(resolve_compressor("rank10", (128,)), C.TopK)
+    fb = resolve_compressor("rank10+natural", (128,))
+    assert isinstance(fb, C.WithNatural) and isinstance(fb.inner, C.TopK)
+    # 2-D slices keep exactly what was asked for
+    assert isinstance(resolve_compressor("rank10", (64, 32)), C.RankK)
+    # non-rank compressors pass through on any shape
+    assert isinstance(resolve_compressor("top10", (128,)), C.TopK)
+    assert isinstance(resolve_compressor("natural", (128,)), C.Natural)
 
 
 def test_identity_compressor_ef_is_exact(key):

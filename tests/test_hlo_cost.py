@@ -3,6 +3,7 @@ modules) — this is what makes the roofline numbers correct."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.launch.hlo_cost import analyze, parse_module, top_contributors
 
@@ -30,7 +31,10 @@ def test_scan_flops_match_unrolled():
     assert fs["flops"] == expected
     assert fu["flops"] == expected
     # builtin cost_analysis undercounts the scan (the motivation)
-    builtin = jax.jit(f_scan).lower(x, w).compile().cost_analysis()
+    from repro.launch.hlo_cost import cost_analysis_dict
+    builtin = cost_analysis_dict(jax.jit(f_scan).lower(x, w).compile())
+    if "flops" not in builtin:
+        pytest.skip("backend cost_analysis reports no flops")
     assert float(builtin["flops"]) < expected / 2
 
 
