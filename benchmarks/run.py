@@ -10,8 +10,8 @@ import json
 import sys
 import time
 
-BENCHES = ("table2", "ef_necessity", "convergence", "kernels", "fig1",
-           "roofline")
+BENCHES = ("table2", "wire", "ef_necessity", "convergence", "kernels",
+           "fig1", "roofline")
 
 
 def main() -> None:
@@ -22,8 +22,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (convergence, ef_necessity, fig1_compression,
-                            kernel_bench, roofline_report, table2_bytes)
-    mods = {"table2": table2_bytes, "ef_necessity": ef_necessity,
+                            kernel_bench, roofline_report, table2_bytes,
+                            wire_bytes)
+    mods = {"table2": table2_bytes, "wire": wire_bytes,
+            "ef_necessity": ef_necessity,
             "convergence": convergence, "kernels": kernel_bench,
             "fig1": fig1_compression, "roofline": roofline_report}
     names = [args.only] if args.only else list(BENCHES)

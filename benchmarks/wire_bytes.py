@@ -1,0 +1,128 @@
+"""Wire-bytes smoke: analytic Table-2 accounting vs the exact bytes the
+fused repro.wire buffer moves, on the paper's NanoGPT-124M shapes.
+
+Three numbers per compressor (all per worker->server message, bf16 wire):
+
+  dense     uncompressed message bytes
+  analytic  LayerPlan.w2s_bytes_per_worker — the paper's Table-2
+            convention (4-byte indices)
+  wire      WireLayout.total_nbytes — the fused uint8 buffer the payload
+            all-gather actually moves (narrow indices, 9-bit Natural)
+
+plus an eval_shape check that packing really produces a buffer of
+exactly ``wire`` bytes, and a concrete pack/unpack round-trip (bit-exact)
+with wall-clock timings to start the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.wire_bytes [--out BENCH_wire.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.muon import EF21Muon, EF21MuonConfig
+from repro.models.api import abstract_params, build_model
+from repro.wire.codecs import NarrowIntCodec
+
+COMPRESSORS = ("top10+natural", "top10", "natural", "rank10+natural")
+
+
+def _synth_payloads(layout, n_workers: int = 1, seed: int = 0) -> list:
+    """Valid (round-trippable) payloads straight from the offset table:
+    narrow-index leaves stay inside their byte-width domain, everything
+    else is arbitrary bits."""
+    key = jax.random.key(seed)
+    out = []
+    for spec in layout.specs:
+        leaves = []
+        for c in spec.codecs:
+            shape = (n_workers,) + spec.stack_shape + tuple(c.shape)
+            n = int(math.prod(shape)) if shape else 1
+            if isinstance(c, NarrowIntCodec):
+                leaves.append((jnp.arange(n, dtype=jnp.int32)
+                               % (1 << (8 * c.width))).reshape(shape))
+            else:
+                dt = jnp.dtype(c.dtype)
+                if jnp.issubdtype(dt, jnp.integer):
+                    leaves.append((jnp.arange(n) % 251).astype(dt
+                                                               ).reshape(shape))
+                else:
+                    key, sub = jax.random.split(key)
+                    leaves.append(jax.random.normal(
+                        sub, shape, jnp.float32).astype(dt))
+        out.append(spec.treedef.unflatten(leaves))
+    return out
+
+
+def run(fast: bool = False):
+    cfg = get_config("nanogpt-124m")
+    model = build_model(cfg)
+    shapes, metas = abstract_params(model)
+    wire_dt = jnp.bfloat16
+    rows = []
+    comps = COMPRESSORS[:1] if fast else COMPRESSORS
+    for name in comps:
+        opt = EF21Muon(EF21MuonConfig(n_workers=1, w2s=name,
+                                      wire_dtype=wire_dt))
+        plan = opt.plan(shapes, metas)
+        layout = plan.wire_layout(wire_dt)
+        dense = plan.dense_bytes(wire_dt)
+        analytic = plan.w2s_bytes_per_worker(wire_dt)
+        wire = layout.total_nbytes
+        # the buffer the step would all-gather is exactly `wire` bytes
+        structs = layout.payload_structs(n_workers=1)
+        buf_struct = jax.eval_shape(layout.pack, structs)
+        assert buf_struct.shape == (1, wire) and buf_struct.dtype == jnp.uint8
+        # concrete round-trip + timing
+        payloads = _synth_payloads(layout)
+        pack = jax.jit(layout.pack)
+        unpack = jax.jit(layout.unpack)
+        buf = jax.block_until_ready(pack(payloads))
+        t0 = time.time()
+        buf = jax.block_until_ready(pack(payloads))
+        t_pack = time.time() - t0
+        back = unpack(buf)
+        jax.block_until_ready(back)
+        t0 = time.time()
+        jax.block_until_ready(unpack(buf))
+        t_unpack = time.time() - t0
+        exact = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for pa, pb in zip(payloads, back)
+            for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)))
+        rows.append({
+            "bench": "wire", "arch": cfg.name, "w2s": name, "wire": "bf16",
+            "dense_bytes": dense, "analytic_bytes": analytic,
+            "wire_bytes": wire,
+            "wire_vs_analytic": round(wire / analytic, 4),
+            "wire_vs_dense": round(wire / dense, 4),
+            "analytic_vs_dense": round(analytic / dense, 4),
+            "roundtrip_exact": bool(exact),
+            "pack_s": round(t_pack, 4), "unpack_s": round(t_unpack, 4)})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_wire.json")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    rows = run(fast=args.fast)
+    for r in rows:
+        print(json.dumps(r), flush=True)
+        assert r["roundtrip_exact"], r
+        assert r["wire_vs_analytic"] <= 1.15, r
+    with open(args.out, "w") as f:
+        json.dump({"bench": "wire_bytes", "rows": rows}, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

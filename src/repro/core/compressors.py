@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, ClassVar
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,18 @@ def _itemsize(dtype) -> int:
 
 @dataclass(frozen=True)
 class Identity:
+    """True identity (the paper's "ID").
+
+    ``lossless_wire`` is the capability flag the EF algebra and the wire
+    layout read (instead of sniffing type names, which breaks for
+    subclasses): True means the payload must carry the *exact* f32
+    difference — no wire-dtype quantisation — so EF21 with this
+    compressor recovers uncompressed Gluon bit-for-bit. Inherited by
+    subclasses; False (the default on every lossy compressor) keeps the
+    wire cast inside C where the feedback loop corrects it.
+    """
     name: str = "identity"
+    lossless_wire: ClassVar[bool] = True
 
     def init(self, key, shape, dtype) -> State:
         return {}
@@ -293,8 +304,15 @@ class WithNatural:
 
     jit-safe: the float-leaf shapes are reconstructed statically from the
     original array shape, so payloads stay fixed-shape pytrees of arrays.
+
+    ``WithNatural(Identity)`` is supported end-to-end (compress,
+    decompress and payload_bytes agree): the inner payload IS the array,
+    so it Natural-compresses the whole message — semantically Natural,
+    kept for composition symmetry. Quantisation makes the wrapper lossy
+    regardless of the inner compressor (``lossless_wire = False``).
     """
     inner: Any
+    lossless_wire: ClassVar[bool] = False
 
     @property
     def name(self):
@@ -304,6 +322,9 @@ class WithNatural:
         return self.inner.init(key, shape, dtype)
 
     def _float_leaf_shapes(self, shape) -> dict[str, tuple[int, ...]]:
+        """Float leaves of a dict payload (Identity's bare-array payload
+        is handled directly in compress/decompress, consistent with the
+        Identity branch of payload_bytes)."""
         if isinstance(self.inner, TopK):
             return {"values": (self.inner.k_for(shape),)}
         if isinstance(self.inner, RankK):
@@ -316,6 +337,9 @@ class WithNatural:
 
     def compress(self, state, x):
         payload, state = self.inner.compress(state, x)
+        if isinstance(self.inner, Identity):
+            codes, signs = natural_compress(payload, use_pallas=False)
+            return {"codes": codes, "signs": signs}, state
         out = dict(payload)
         for name in self._float_leaf_shapes(x.shape):
             codes, signs = natural_compress(payload[name], use_pallas=False)
@@ -325,6 +349,10 @@ class WithNatural:
         return out, state
 
     def decompress(self, payload, shape, dtype):
+        if isinstance(self.inner, Identity):
+            return self.inner.decompress(natural_decompress(
+                payload["codes"], payload["signs"], shape, jnp.bfloat16),
+                shape, dtype)
         inner_payload = dict(payload)
         for name, lshape in self._float_leaf_shapes(shape).items():
             inner_payload[name] = natural_decompress(
@@ -372,6 +400,7 @@ def empirical_alpha(comp, key, x, n_trials: int = 8, norm_kind: str = "frobenius
 REGISTRY = {
     "identity": lambda: Identity(),
     "natural": lambda: Natural(),
+    "identity+natural": lambda: WithNatural(Identity()),
     "top5": lambda: TopK(0.05),
     "top10": lambda: TopK(0.10),
     "top15": lambda: TopK(0.15),

@@ -29,8 +29,11 @@ def ef_compress_step(comp, comp_state: Any, estimate: jax.Array,
     new_estimate = estimate + decompress(payload) in f32.
     """
     diff = (target.astype(jnp.float32) - estimate.astype(jnp.float32))
-    # Identity is a true identity (the paper's "ID"): no wire quantisation.
-    if type(comp).__name__ == "Identity":
+    # Lossless compressors (the paper's "ID" and subclasses) carry the
+    # exact f32 difference — capability flag, not a type-name check, so
+    # Identity subclasses stay lossless and WithNatural(Identity) does
+    # not (the Natural wrapper quantises).
+    if getattr(comp, "lossless_wire", False):
         wire_dtype = jnp.float32
     payload, comp_state = comp.compress(comp_state, diff.astype(wire_dtype))
     delta = comp.decompress(payload, diff.shape, jnp.float32)

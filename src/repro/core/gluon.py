@@ -20,8 +20,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.dist.layerwise import vmap_n
+
 from .lmo import lmo_direction
-from .muon import ParamMeta, _vmap_n
+from .muon import ParamMeta
 
 
 def gluon_init(params: Any) -> dict:
@@ -51,6 +53,6 @@ def gluon_update(params: Any, grads: Any, opt_state: dict, metas: Any,
             return (x.astype(jnp.float32)
                     + radius * d.astype(jnp.float32)).astype(x.dtype)
 
-        new_params.append(_vmap_n(upd, meta.stack_dims)(x, m))
+        new_params.append(vmap_n(upd, meta.stack_dims)(x, m))
     return treedef.unflatten(new_params), {
         "step": opt_state["step"] + 1, "m": m_new}

@@ -40,9 +40,6 @@ from repro.dist.layerwise import LayerPlan, dense_payload_bytes, vmap_n
 from .error_feedback import ef_compress_step
 from .lmo import default_radius_scale, lmo_direction
 
-# Back-compat alias (gluon.py and external users import it from here).
-_vmap_n = vmap_n
-
 
 @dataclass(frozen=True)
 class ParamMeta:
@@ -77,6 +74,7 @@ class EF21MuonConfig:
     use_pallas: Any = "auto"
     wire_dtype: Any = jnp.bfloat16
     state_dtype: Any = jnp.float32
+    wire_pack: bool = True         # fuse payloads into one uint8 wire buffer
 
 
 def _unzip(pairs: list, n: int) -> tuple[list, ...]:
@@ -149,6 +147,13 @@ class EF21Muon:
         return self.plan(params, metas).w2s_bytes_per_worker(
             self.cfg.wire_dtype)
 
+    def wire_bytes_per_worker(self, params: Any, metas: Any) -> int:
+        """Exact bytes of the fused uint8 wire buffer (repro.wire) — what
+        the payload all-gather actually moves, next to the analytic
+        Table-2 number above."""
+        return self.plan(params, metas).wire_layout(
+            self.cfg.wire_dtype).total_nbytes
+
     def dense_bytes(self, params: Any) -> int:
         return dense_payload_bytes(
             (p.shape for p in jax.tree.leaves(params)), self.cfg.wire_dtype)
@@ -156,9 +161,16 @@ class EF21Muon:
     # The jit-friendly entry point: metas are static, so we build the step
     # function once per (metas, shapes) and let the caller jit it.
     def make_step(self, metas: Any,
-                  reshard_payloads: Callable = lambda tree: tree,
+                  reshard_payloads: Callable | None = None,
                   donate: bool = False) -> Callable:
+        """``reshard_payloads`` is the cross-worker communication hook
+        (the trainer's worker-axis all-gather). None means single-process
+        — there is no collective to fuse, so the wire pack/unpack is
+        skipped entirely (it is a values-identity either way)."""
         cfg = self.cfg
+        pack_wire = cfg.wire_pack and reshard_payloads is not None
+        if reshard_payloads is None:
+            reshard_payloads = lambda tree: tree
 
         def step(state: dict, grad_and_loss: Callable, batch: Any,
                  t: jax.Array | float) -> tuple[dict, dict]:
@@ -201,9 +213,16 @@ class EF21Muon:
                 plan.flatten(state["g_w"]),
                 plan.flatten(m_new), extra_vmap=1), 3)
 
-            # ---- 4. "server" receives payloads: gather across the worker
-            # axis (trainer supplies the resharding hook), decompress, average.
-            payloads = reshard_payloads(payloads)
+            # ---- 4. "server" receives payloads: pack the whole message
+            # into one contiguous uint8 buffer (repro.wire), gather it
+            # across the worker axis (trainer supplies the resharding
+            # hook == ONE fused all-gather of exactly the accounted
+            # bytes), unpack bit-exactly, decompress, average.
+            if pack_wire:
+                wire = plan.wire_layout(cfg.wire_dtype)
+                payloads = wire.unpack(reshard_payloads(wire.pack(payloads)))
+            else:
+                payloads = reshard_payloads(payloads)
             deltas = plan.map_flat(
                 lambda lp, pl: lp.w2s.decompress(
                     pl, lp.slice_shape, jnp.float32),

@@ -73,6 +73,7 @@ class LayerPlan:
     def __init__(self, treedef, leaves: list[LeafPlan]):
         self.treedef = treedef
         self.leaves = leaves
+        self._wire_layouts: dict = {}   # wire-dtype name -> WireLayout
 
     @classmethod
     def build(cls, params: Any, metas: Any, w2s: str = "identity",
@@ -134,6 +135,21 @@ class LayerPlan:
         """Uncompressed wire cost of the same message."""
         return dense_payload_bytes((lp.shape for lp in self.leaves),
                                    wire_dtype)
+
+    def wire_layout(self, wire_dtype):
+        """The static WireLayout (repro.wire) for this plan: the offset
+        table of the fused per-worker payload buffer, memoised per wire
+        dtype. ``wire_layout(d).total_nbytes`` is the *exact* byte count
+        the payload all-gather moves — compare with the analytic Table-2
+        ``w2s_bytes_per_worker`` (which keeps the paper's 4-byte-index
+        convention)."""
+        # Deferred import: repro.wire.layout imports this module.
+        from repro.wire.layout import build_layout
+
+        key = jnp.dtype(wire_dtype).name
+        if key not in self._wire_layouts:
+            self._wire_layouts[key] = build_layout(self, wire_dtype)
+        return self._wire_layouts[key]
 
 
 def dense_payload_bytes(shapes, wire_dtype) -> int:

@@ -63,6 +63,12 @@ def fused_matmul(a: jax.Array, b: jax.Array, c: jax.Array | None = None,
     assert k == k2, (a.shape, b.shape)
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
         (a.shape, b.shape, block_m, block_n, block_k)
+    if _CompilerParams is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams in this jax version; the Pallas "
+            "Newton-Schulz path cannot be configured — pass "
+            "use_pallas=False (jnp reference) or update jax.")
     out_dtype = out_dtype or a.dtype
     nk = k // block_k
     has_c = c is not None

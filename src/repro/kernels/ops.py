@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .bitpack import pack_bits, unpack_bits
 from .natural_pack import natural_encode
 from .newton_schulz import ns_iteration_pallas
 
@@ -56,18 +57,6 @@ def newton_schulz(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
     return x.T if transpose else x
 
 
-def _pack_bits(bits01: jax.Array) -> jax.Array:
-    """[k*8] uint8 of {0,1} -> [k] uint8 bit-packed (LSB first)."""
-    b = bits01.reshape(-1, 8).astype(jnp.uint8)
-    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
-    return jnp.sum(b * weights[None, :], axis=1, dtype=jnp.uint8)
-
-
-def _unpack_bits(packed: jax.Array) -> jax.Array:
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    return ((packed[:, None] >> shifts[None, :]) & 1).reshape(-1)
-
-
 def natural_compress(x: jax.Array, use_pallas: str | bool = "auto",
                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """Natural-compress any-shaped array -> (codes uint8 [N], packed signs
@@ -93,12 +82,16 @@ def natural_compress(x: jax.Array, use_pallas: str | bool = "auto",
         pad = (-n) % 8
         flat_p = jnp.pad(flat, (0, pad))
         code, sign = ref.natural_compress_ref(flat_p)
-    return code[:n], _pack_bits(jnp.pad(sign[:n], (0, (-n) % 8)))
+    return code[:n], pack_bits(jnp.pad(sign[:n], (0, (-n) % 8)),
+                               use_pallas=use_pallas, interpret=interpret)
 
 
 def natural_decompress(code: jax.Array, packed_sign: jax.Array,
-                       shape: tuple[int, ...], dtype=jnp.bfloat16) -> jax.Array:
+                       shape: tuple[int, ...], dtype=jnp.bfloat16,
+                       use_pallas: str | bool = "auto",
+                       interpret: bool = False) -> jax.Array:
     n = code.shape[0]
-    sign = _unpack_bits(packed_sign)[:n]
+    sign = unpack_bits(packed_sign, use_pallas=use_pallas,
+                       interpret=interpret)[:n]
     vals = ref.natural_decompress_ref(code, sign)
     return vals.reshape(shape).astype(dtype)

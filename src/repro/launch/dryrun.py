@@ -82,7 +82,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                w2s: str = "rank10", tag: str = "baseline",
                fsdp: bool | None = None, beta: float = 0.1,
                s2w: str = "identity", pad_heads: int | None = None,
-               zero1_lmo: bool = False):
+               zero1_lmo: bool = False, wire_pack: bool = True):
     """Lower + compile one (arch, shape, mesh). Returns the record dict."""
     import dataclasses
     cfg = get_config(arch)
@@ -113,7 +113,19 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         n_w = n_workers_for(mesh)
         tr = Trainer(model, TrainerConfig(
             n_workers=n_w, beta=beta, w2s=w2s, s2w=s2w, fsdp=use_fsdp,
-            use_pallas=False, zero1_lmo=zero1_lmo), mesh=mesh)
+            use_pallas=False, zero1_lmo=zero1_lmo,
+            wire_pack=wire_pack), mesh=mesh)
+        # wire accounting: analytic Table-2 bytes vs the exact bytes the
+        # fused payload buffer moves (compare with the measured
+        # u8_coll_bytes parsed from the compiled HLO below; that
+        # comparison is only meaningful when wire_pack is on — in the
+        # --no-wire-pack arm u8_coll_bytes sees just the uint8 payload
+        # leaves, a lower bound on the unpacked payload traffic)
+        plan = tr.layer_plan()
+        wire_dt = tr.opt.cfg.wire_dtype
+        rec.update(w2s_bytes_analytic=plan.w2s_bytes_per_worker(wire_dt),
+                   w2s_bytes_wire=plan.wire_layout(wire_dt).total_nbytes,
+                   wire_pack=wire_pack)
         batch = input_specs(cfg, shape, n_workers=n_w)
         state = tr.state_shapes()
         jitted = tr.jit_step(batch)
@@ -162,6 +174,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         hlo_flops=flops, hlo_bytes=bytes_acc,
         coll_bytes=int(cost["coll_bytes"]),
         coll_by_kind=cost["coll_by_kind"],
+        u8_coll_bytes=cost["u8_coll_bytes"],
+        u8_coll_count=cost["u8_coll_count"],
         xla_flops=float(xla_cost.get("flops", 0.0)),
         xla_bytes=float(xla_cost.get("bytes accessed", 0.0)),
         model_flops=mflops, model_flops_per_dev=mflops / n_dev,
@@ -200,6 +214,9 @@ def main():
                     help="pad q-heads to this count (TP adaptation, C2)")
     ap.add_argument("--zero1", action="store_true",
                     help="beyond-paper layer-parallel LMO sharding")
+    ap.add_argument("--no-wire-pack", action="store_true",
+                    help="ship the unpacked payload pytree (per-leaf "
+                         "collectives) instead of the fused wire buffer")
     ap.add_argument("--out", default=RESULTS)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -226,7 +243,8 @@ def main():
                     rec = lower_pair(arch, shape, mesh == "multi",
                                      w2s=args.w2s, tag=args.tag, fsdp=fsdp,
                                      s2w=args.s2w, pad_heads=args.pad_heads,
-                                     zero1_lmo=args.zero1)
+                                     zero1_lmo=args.zero1,
+                                     wire_pack=not args.no_wire_pack)
                 except Exception as e:
                     rec = {"arch": arch, "shape": shape, "mesh": mesh,
                            "tag": args.tag, "status": "error",

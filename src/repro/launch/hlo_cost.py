@@ -242,11 +242,22 @@ class Cost:
     hbm_bytes: float = 0.0
     coll_bytes: float = 0.0
     coll_by_kind: dict = field(default_factory=dict)
+    # uint8 collective operands, tracked separately. With wire packing
+    # on (the default) this is exactly the fused repro.wire payload
+    # buffer — count 1, bytes == WireLayout.total_nbytes — comparable
+    # to the analytic account. In the --no-wire-pack A/B arm it captures
+    # only the uint8 payload leaves (Natural code/sign planes), NOT the
+    # int32 index / bf16 value collectives, so it is a lower bound
+    # there; use coll_by_kind for the unpacked arm's totals.
+    u8_coll_bytes: float = 0.0
+    u8_coll_count: float = 0.0
 
     def add(self, other: "Cost", scale: float = 1.0):
         self.flops += scale * other.flops
         self.hbm_bytes += scale * other.hbm_bytes
         self.coll_bytes += scale * other.coll_bytes
+        self.u8_coll_bytes += scale * other.u8_coll_bytes
+        self.u8_coll_count += scale * other.u8_coll_count
         for k, v in other.coll_by_kind.items():
             self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + scale * v
 
@@ -300,6 +311,11 @@ def analyze(text: str) -> dict:
                 b = sum(comp.sizes.get(o, 0) for o in ins.operands)
                 c.coll_bytes += b
                 c.coll_by_kind[kind] = c.coll_by_kind.get(kind, 0.0) + b
+                u8 = sum(comp.sizes.get(o, 0) for o in ins.operands
+                         if comp.types.get(o, "").startswith("u8["))
+                if u8:
+                    c.u8_coll_bytes += u8
+                    c.u8_coll_count += 1
                 if not fused:
                     c.hbm_bytes += b + comp.sizes.get(ins.name, 0)
             elif base == "fusion":
@@ -372,6 +388,8 @@ def analyze(text: str) -> dict:
     return {"flops": c.flops, "hbm_bytes": c.hbm_bytes,
             "coll_bytes": c.coll_bytes,
             "coll_by_kind": {k: int(v) for k, v in c.coll_by_kind.items()},
+            "u8_coll_bytes": int(c.u8_coll_bytes),
+            "u8_coll_count": int(c.u8_coll_count),
             "entry": entry}
 
 

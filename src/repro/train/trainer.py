@@ -12,9 +12,12 @@ The dataflow per step (DESIGN.md §5):
      cross-worker collectives are induced: worker computations are
      independent by construction.
   3. per-worker momentum + EF21 compress: R_j = C_D(M_j - G_j); G_j += R_j
-  4. payloads resharded to replicated  == all-gather of payload bytes over
-     the worker axis (the *only* cross-worker communication).
-  5. replicated server: G += mean_j decompress(R_j); X = LMO_B(X, t)(G).
+  4. payloads packed into one contiguous uint8 buffer per worker
+     (repro.wire), then resharded to replicated == ONE fused all-gather
+     of exactly the accounted payload bytes over the worker axis (the
+     *only* cross-worker communication).
+  5. replicated server: G += mean_j decompress(unpack(R_j));
+     X = LMO_B(X, t)(G).
 
 Used both for real (CPU-scale) training in examples/benchmarks and for
 the multi-pod dry-run (ShapeDtypeStruct in, .lower().compile() out).
@@ -46,6 +49,7 @@ class TrainerConfig:
     ns_steps: int = 5
     use_pallas: Any = "auto"
     zero1_lmo: bool = False   # beyond-paper: layer-parallel LMO sharding
+    wire_pack: bool = True    # fused uint8 payload buffer (repro.wire)
 
 
 class Trainer:
@@ -56,7 +60,7 @@ class Trainer:
         self.opt = EF21Muon(EF21MuonConfig(
             n_workers=tcfg.n_workers, beta=tcfg.beta, w2s=tcfg.w2s,
             s2w=tcfg.s2w, ns_steps=tcfg.ns_steps,
-            use_pallas=tcfg.use_pallas))
+            use_pallas=tcfg.use_pallas, wire_pack=tcfg.wire_pack))
         # metas are static: build once from the model's abstract init
         from repro.models.api import abstract_params
         self._params_shapes, self.metas = abstract_params(model)
@@ -104,9 +108,12 @@ class Trainer:
             replicated = NamedSharding(self.mesh, P())
 
             def reshard(payloads):
-                # w2s communication: payloads live on the worker axis
-                # (leading dim), then replicate == all-gather of compressed
-                # payload bytes over exactly the slow links (DESIGN.md §3).
+                # w2s communication: with wire packing this receives ONE
+                # [n_workers, total_nbytes] uint8 buffer; pin it to the
+                # worker axis, then replicate == a single fused
+                # all-gather of compressed payload bytes over exactly
+                # the slow links (DESIGN.md §3, §6). The tree.map keeps
+                # the unpacked (wire_pack=False) per-leaf path working.
                 def one(x):
                     if x.ndim and x.shape[0] % wn == 0:
                         x = jax.lax.with_sharding_constraint(x, sharded)
@@ -114,7 +121,7 @@ class Trainer:
 
                 return jax.tree.map(one, payloads)
         else:
-            reshard = lambda tree: tree
+            reshard = None   # single-process: no collective, no wire pack
 
         opt_step = self.opt.make_step(self.metas, reshard_payloads=reshard)
 

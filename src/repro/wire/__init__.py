@@ -1,0 +1,9 @@
+# Wire-format subsystem: lowers each worker's per-step payload pytree
+# into one contiguous uint8 buffer with a static offset table, so the
+# w2s all-gather moves exactly the accounted bytes in one collective
+# (DESIGN.md §6).
+from .codecs import NarrowIntCodec, RawCodec, index_domains, leaf_codecs
+from .layout import WireLayout, WireSpec, build_layout
+
+__all__ = ["RawCodec", "NarrowIntCodec", "leaf_codecs", "index_domains",
+           "WireSpec", "WireLayout", "build_layout"]

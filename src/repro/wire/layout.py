@@ -1,0 +1,151 @@
+"""Static wire layout: the whole per-worker w2s message as ONE uint8
+buffer with a precomputed offset table (DESIGN.md §6).
+
+Built once per (LayerPlan, wire dtype) — the payload structure of every
+leaf is derived abstractly (``jax.eval_shape`` over the resolved
+compressor's ``init``/``compress``), so construction allocates nothing
+and is safe inside a traced step.
+
+Buffer layout, per worker:
+
+    [ leaf 0: stack slice 0 | stack slice 1 | ... ][ leaf 1: ... ] ...
+
+Each slice region is the concatenation of that compressor's payload
+leaves, each encoded by its codec (see ``codecs.py``).  ``pack`` maps
+codecs over the worker + stack dims with the same ``vmap_n`` discipline
+as every other optimizer phase, producing a ``[n_workers, total_nbytes]``
+buffer; replicating that buffer over the worker mesh axis is the single
+fused payload all-gather of the step.  ``unpack`` is the bit-exact
+inverse, so the EF21 sender/receiver invariant survives the wire.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.layerwise import vmap_n
+
+from .codecs import leaf_codecs
+
+
+def _payload_struct(comp: Any, slice_shape: tuple[int, ...], in_dtype):
+    """Abstract payload of one slice: eval_shape over init + compress."""
+    def one(key):
+        x = jnp.zeros(slice_shape, in_dtype)
+        state = comp.init(key, slice_shape, in_dtype)
+        payload, _ = comp.compress(state, x)
+        return payload
+
+    return jax.eval_shape(one, jax.random.key(0))
+
+
+@dataclass(frozen=True)
+class WireSpec:
+    """Everything static about one parameter leaf's wire region."""
+    offset: int                     # byte offset of the leaf region
+    slice_nbytes: int               # packed bytes of ONE stack slice
+    stack_shape: tuple[int, ...]
+    n_stack: int
+    codec_id: str                   # human-readable codec summary
+    treedef: Any                    # payload treedef of one slice
+    codecs: tuple                   # per payload leaf, flatten order
+    splits: tuple[int, ...]         # byte offsets of payload leaves
+
+    @property
+    def region_nbytes(self) -> int:
+        return self.n_stack * self.slice_nbytes
+
+    # --------------------------------------------------- slice pack pair
+    def pack_slice(self, payload: Any) -> jax.Array:
+        leaves = self.treedef.flatten_up_to(payload)
+        parts = [c.pack(x) for c, x in zip(self.codecs, leaves)]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def unpack_slice(self, buf: jax.Array) -> Any:
+        leaves = [c.unpack(jax.lax.slice_in_dim(buf, o, o + c.nbytes))
+                  for c, o in zip(self.codecs, self.splits)]
+        return self.treedef.unflatten(leaves)
+
+
+@dataclass(frozen=True)
+class WireLayout:
+    """Offset table + pack/unpack for the full per-step message."""
+    specs: tuple[WireSpec, ...]     # aligned with LayerPlan.leaves
+    total_nbytes: int               # exact bytes of one worker's message
+
+    # ------------------------------------------------------ message pack
+    def pack(self, flat_payloads: list) -> jax.Array:
+        """Flat per-leaf payload list (leaves ``[n_workers, *stack, ...]``,
+        exactly as ``LayerPlan.map_flat(..., extra_vmap=1)`` produces
+        them) -> ``[n_workers, total_nbytes]`` uint8 buffer."""
+        parts = []
+        for spec, payload in zip(self.specs, flat_payloads):
+            packed = vmap_n(spec.pack_slice,
+                            len(spec.stack_shape) + 1)(payload)
+            parts.append(packed.reshape(packed.shape[0], -1))
+        return jnp.concatenate(parts, axis=1)
+
+    def unpack(self, buf: jax.Array) -> list:
+        """Bit-exact inverse of ``pack`` (same flat-list convention)."""
+        n_workers = buf.shape[0]
+        out = []
+        for spec in self.specs:
+            seg = jax.lax.slice_in_dim(
+                buf, spec.offset, spec.offset + spec.region_nbytes, axis=1)
+            seg = seg.reshape((n_workers,) + spec.stack_shape
+                              + (spec.slice_nbytes,))
+            out.append(vmap_n(spec.unpack_slice,
+                              len(spec.stack_shape) + 1)(seg))
+        return out
+
+    # ------------------------------------------------------- bookkeeping
+    def payload_structs(self, n_workers: int) -> list:
+        """Abstract payload trees with the [n_workers, *stack] leading
+        dims (what ``pack`` consumes) — for eval_shape checks/benches."""
+        out = []
+        for spec in self.specs:
+            lead = (n_workers,) + spec.stack_shape
+            out.append(jax.tree.map(
+                lambda s, l=lead: jax.ShapeDtypeStruct(
+                    l + tuple(s.shape), s.dtype),
+                spec.treedef.unflatten(
+                    [jax.ShapeDtypeStruct(c.shape,
+                                          jnp.dtype(getattr(c, "dtype",
+                                                            "int32")))
+                     for c in spec.codecs])))
+        return out
+
+    def describe(self) -> list[dict]:
+        """Static offset table (one row per leaf) for reports/tests."""
+        return [{"offset": s.offset, "slice_nbytes": s.slice_nbytes,
+                 "n_stack": s.n_stack, "codec": s.codec_id}
+                for s in self.specs]
+
+
+def build_layout(plan: Any, wire_dtype) -> WireLayout:
+    """The WireLayout for a LayerPlan — the static offset table the
+    fused payload all-gather is laid out by."""
+    specs = []
+    offset = 0
+    for lp in plan.leaves:
+        comp = lp.w2s
+        in_dtype = (jnp.float32 if getattr(comp, "lossless_wire", False)
+                    else jnp.dtype(wire_dtype))
+        struct = _payload_struct(comp, lp.slice_shape, in_dtype)
+        codecs, treedef = leaf_codecs(comp, lp.slice_shape, struct)
+        splits, pos = [], 0
+        for c in codecs:
+            splits.append(pos)
+            pos += c.nbytes
+        cid = getattr(comp, "name", type(comp).__name__) + "[" + \
+            "+".join(c.cid for c in codecs) + "]"
+        specs.append(WireSpec(
+            offset=offset, slice_nbytes=pos, stack_shape=lp.stack_shape,
+            n_stack=lp.n_stack, codec_id=cid, treedef=treedef,
+            codecs=codecs, splits=tuple(splits)))
+        offset += specs[-1].region_nbytes
+    return WireLayout(specs=tuple(specs), total_nbytes=offset)

@@ -106,6 +106,62 @@ def test_natural_pallas_end_to_end(key):
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
 
 
+@given(n8=st.integers(1, 1500), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_bitpack_sign_kernels_match_refs(n8, seed):
+    """Pallas 1-bit pack/unpack (interpret) == jnp refs, byte-for-byte,
+    for arbitrary multiple-of-8 lengths (the Natural sign-plane path)."""
+    from repro.kernels import bitpack as bp
+    bits = jax.random.bernoulli(
+        jax.random.key(seed), 0.5, (8 * n8,)).astype(jnp.uint8)
+    ref_p = bp.pack_bits_ref(bits)
+    ker_p = bp.pack_bits(bits, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref_p), np.asarray(ker_p))
+    ker_u = bp.unpack_bits(ref_p, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(ker_u))
+
+
+@pytest.mark.parametrize("width,hi", [(2, 1 << 16), (3, 1 << 24),
+                                      (4, 1 << 24)])
+@pytest.mark.parametrize("k", [1, 7, 128, 1000])
+def test_bitpack_narrow_kernels_match_refs(width, hi, k, key):
+    """Pallas narrow int encode/decode (interpret) == jnp refs and
+    round-trip exactly for every supported byte width."""
+    from repro.kernels import bitpack as bp
+    idx = jax.random.randint(key, (k,), 0, hi, jnp.int32)
+    ref_e = bp.narrow_encode_ref(idx, width)
+    ker_e = bp.narrow_encode(idx, width, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref_e), np.asarray(ker_e))
+    ker_d = bp.narrow_decode(ref_e, width, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ker_d))
+
+
+def test_natural_compress_pallas_signs_roundtrip(key):
+    """natural_compress with the full Pallas path (encode kernel + sign
+    bitpack kernel) stays bit-identical to the jnp path end-to-end."""
+    x = jax.random.normal(key, (777,)).astype(jnp.bfloat16)
+    c1, s1 = natural_compress(x, use_pallas=True, interpret=True)
+    c2, s2 = natural_compress(x, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    x1 = natural_decompress(c1, s1, (777,), use_pallas=True, interpret=True)
+    x2 = natural_decompress(c2, s2, (777,), use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+
+
+def test_newton_schulz_errors_without_compiler_params(key, monkeypatch):
+    """Neither CompilerParams nor TPUCompilerParams -> an explicit error
+    (not a None crash) on the Pallas path; the jnp path keeps working."""
+    import importlib
+    ns_mod = importlib.import_module("repro.kernels.newton_schulz")
+    g = jax.random.normal(key, (16, 16))
+    monkeypatch.setattr(ns_mod, "_CompilerParams", None)
+    with pytest.raises(RuntimeError, match="CompilerParams"):
+        ns_mod.fused_matmul(jnp.zeros((128, 128)), jnp.zeros((128, 128)))
+    out = newton_schulz(g, steps=2, use_pallas=False)
+    assert out.shape == g.shape
+
+
 def test_ns_zero_padding_exactness(key):
     """Zero padding is exact for NS: padded result sliced back equals the
     unpadded oracle (the ops.py wrapper invariant)."""

@@ -102,7 +102,8 @@ from repro.launch.hlo_cost import analyze
 mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
 cfg = get_config("granite-3-2b").reduced()
 model = build_model(cfg)
-tr = Trainer(model, TrainerConfig(n_workers=4, beta=0.5, w2s="top10",
+tr = Trainer(model, TrainerConfig(n_workers=4, beta=0.5,
+                                  w2s="top10+natural",
                                   use_pallas=False, remat=False), mesh=mesh)
 shape = ShapeSpec("t", "train", 32, 8)
 data = SyntheticLM(cfg, shape, n_workers=4, seed=0)
@@ -116,12 +117,17 @@ state = jax.device_put(state, tr.shardings(jax.tree.map(
 lowered = step.lower(state, batch, jnp.asarray(0.01, jnp.float32))
 compiled = lowered.compile()
 a = analyze(compiled.as_text())
+plan = tr.layer_plan()
+wire_dt = tr.opt.cfg.wire_dtype
 # run two real steps on 8 host devices
 state, aux1 = step(state, batch, 0.01)
 state, aux2 = step(state, data.batch_at(1), 0.01)
 print(json.dumps({
     "loss1": float(aux1["loss"]), "loss2": float(aux2["loss"]),
     "coll_bytes": a["coll_bytes"], "coll_by_kind": a["coll_by_kind"],
+    "u8_bytes": a["u8_coll_bytes"], "u8_count": a["u8_coll_count"],
+    "analytic_bytes": plan.w2s_bytes_per_worker(wire_dt),
+    "wire_bytes": plan.wire_layout(wire_dt).total_nbytes,
     "flops": a["flops"],
 }))
 """
@@ -130,8 +136,11 @@ print(json.dumps({
 @pytest.mark.slow
 def test_spmd_train_step_runs_on_8_devices():
     """Real SPMD execution: the jitted EF21-Muon step runs on an 8-device
-    host mesh, produces finite losses, and its HLO contains payload
-    collectives (the w2s all-gather)."""
+    host mesh, produces finite losses, and the w2s send is ONE fused
+    uint8 payload all-gather whose measured HLO bytes equal the
+    repro.wire offset-table account and agree with the analytic Table-2
+    value (within 1.15x; the wire is *below* it because narrow index
+    encoding beats the paper's 4-byte-index convention)."""
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
@@ -142,5 +151,10 @@ def test_spmd_train_step_runs_on_8_devices():
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert np.isfinite(rec["loss1"]) and np.isfinite(rec["loss2"])
     assert rec["coll_bytes"] > 0
-    assert "all-gather" in rec["coll_by_kind"] or \
-        "all-reduce" in rec["coll_by_kind"]
+    # exactly one fused payload collective, not one per payload leaf
+    assert rec["u8_count"] == 1, rec
+    # measured collective bytes == the static wire layout, byte-for-byte
+    assert rec["u8_bytes"] == rec["wire_bytes"], rec
+    # and the wire agrees with the analytic Table-2 account (<= 1.15x)
+    assert rec["u8_bytes"] <= 1.15 * rec["analytic_bytes"], rec
+    assert rec["u8_bytes"] >= 0.25 * rec["analytic_bytes"], rec
