@@ -13,13 +13,15 @@ from repro.kernels import ref
 from repro.kernels.ops import natural_compress, newton_schulz
 
 
+def _first(out):
+    return out[0] if isinstance(out, tuple) else out
+
+
 def _time(fn, *args, reps=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    _first(fn(*args)).block_until_ready()   # single warm-up call
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args)
-        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        _first(fn(*args)).block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6
 
 

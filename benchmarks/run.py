@@ -10,7 +10,7 @@ import json
 import sys
 import time
 
-BENCHES = ("table2", "wire", "ef_necessity", "convergence", "kernels",
+BENCHES = ("table2", "wire", "ns", "ef_necessity", "convergence", "kernels",
            "fig1", "roofline")
 
 
@@ -22,9 +22,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (convergence, ef_necessity, fig1_compression,
-                            kernel_bench, roofline_report, table2_bytes,
-                            wire_bytes)
-    mods = {"table2": table2_bytes, "wire": wire_bytes,
+                            kernel_bench, ns_bench, roofline_report,
+                            table2_bytes, wire_bytes)
+    mods = {"table2": table2_bytes, "wire": wire_bytes, "ns": ns_bench,
             "ef_necessity": ef_necessity,
             "convergence": convergence, "kernels": kernel_bench,
             "fig1": fig1_compression, "roofline": roofline_report}

@@ -2,13 +2,15 @@
 from .adamw import adamw_init, adamw_update
 from .compressors import get_compressor
 from .gluon import gluon_init, gluon_update
-from .lmo import default_radius_scale, lmo_direction, lmo_step, sharp
+from .lmo import (default_radius_scale, lmo_direction, lmo_direction_batched,
+                  lmo_step, sharp)
 from .muon import EF21Muon, EF21MuonConfig, ParamMeta, meta_like
 from .norms import dual_norm, norm
 
 __all__ = [
     "EF21Muon", "EF21MuonConfig", "ParamMeta", "meta_like",
     "gluon_init", "gluon_update", "adamw_init", "adamw_update",
-    "lmo_direction", "lmo_step", "sharp", "default_radius_scale",
+    "lmo_direction", "lmo_direction_batched", "lmo_step", "sharp",
+    "default_radius_scale",
     "get_compressor", "norm", "dual_norm",
 ]

@@ -23,7 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import newton_schulz
+from repro.kernels import newton_schulz, newton_schulz_batched
 
 EPS = 1e-12
 
@@ -80,6 +80,24 @@ def lmo_direction(g: jax.Array, kind: str, *, ns_steps: int = 5,
         s, u, v = _power_iteration_rank1(g)
         return (-jnp.outer(u, v)).astype(g.dtype)
     raise ValueError(f"unknown LMO kind: {kind}")
+
+
+def lmo_direction_batched(g: jax.Array, kind: str = "spectral", *,
+                          ns_steps: int = 5,
+                          use_pallas: str | bool = "auto") -> jax.Array:
+    """Batched Z* over a ``[B, m, n]`` canonical slice stack (m <= n,
+    orientation fixed upstream by ``repro.dist.bucketing``).
+
+    Spectral only — the one LMO whose per-slice cost (a Newton-Schulz
+    chain) warrants bucketed dispatch (DESIGN.md §7); every other kind is
+    elementwise and fuses trivially. Bit-equal per slice to
+    ``lmo_direction(slice, "spectral")`` on the jnp path.
+    """
+    if kind != "spectral":
+        raise ValueError(f"batched LMO supports 'spectral' only, got {kind}")
+    if g.ndim != 3:
+        raise ValueError("batched spectral LMO needs a [B, m, n] stack")
+    return -newton_schulz_batched(g, steps=ns_steps, use_pallas=use_pallas)
 
 
 def sharp(g: jax.Array, kind: str, **kw) -> jax.Array:

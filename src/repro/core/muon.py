@@ -29,7 +29,9 @@ Special cases recovered exactly (tested):
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
+from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -38,7 +40,7 @@ import jax.numpy as jnp
 from repro.dist.layerwise import LayerPlan, dense_payload_bytes, vmap_n
 
 from .error_feedback import ef_compress_step
-from .lmo import default_radius_scale, lmo_direction
+from .lmo import default_radius_scale, lmo_direction, lmo_direction_batched
 
 
 @dataclass(frozen=True)
@@ -75,6 +77,7 @@ class EF21MuonConfig:
     wire_dtype: Any = jnp.bfloat16
     state_dtype: Any = jnp.float32
     wire_pack: bool = True         # fuse payloads into one uint8 wire buffer
+    ns_bucketing: bool = True      # batch spectral LMOs by shape bucket (§7)
 
 
 def _unzip(pairs: list, n: int) -> tuple[list, ...]:
@@ -84,18 +87,22 @@ def _unzip(pairs: list, n: int) -> tuple[list, ...]:
 class EF21Muon:
     def __init__(self, cfg: EF21MuonConfig):
         self.cfg = cfg
-        self._plans: dict = {}
+        self._plans: OrderedDict = OrderedDict()
 
     # ------------------------------------------------------------------ plan
     def plan(self, params: Any, metas: Any) -> LayerPlan:
-        """The LayerPlan for this (treedef, metas, shapes) — cached, so
-        init, every traced step and the wire accounting share one plan."""
+        """The LayerPlan for this (treedef, metas, shapes) — cached LRU
+        (bounded at 8 entries, oldest dropped first), so init, every
+        traced step and the wire accounting share one plan, and shape
+        sweeps don't rebuild every live plan on eviction."""
         leaves, treedef = jax.tree.flatten(params)
         metas_l = tuple(treedef.flatten_up_to(metas))
         key = (treedef, tuple(tuple(p.shape) for p in leaves), metas_l)
-        if key not in self._plans:
-            if len(self._plans) >= 8:   # real trainers use one shape set;
-                self._plans.clear()     # bound the cache for shape sweeps
+        if key in self._plans:
+            self._plans.move_to_end(key)
+        else:
+            if len(self._plans) >= 8:
+                self._plans.popitem(last=False)
             self._plans[key] = LayerPlan.build(
                 params, metas, w2s=self.cfg.w2s, s2w=self.cfg.s2w)
         return self._plans[key]
@@ -231,7 +238,12 @@ class EF21Muon:
                      + jnp.mean(d, axis=0)).astype(gs.dtype)
                     for gs, d in zip(plan.flatten(state["g_server"]), deltas)]
 
-            # ---- 5. layer-wise LMO step on the server iterate
+            # ---- 5. layer-wise LMO step on the server iterate. With
+            # ns_bucketing the spectral leaves are grouped by canonical
+            # slice shape (DESIGN.md §7): one batched Newton-Schulz chain
+            # per bucket instead of one per leaf, stacks folded into the
+            # batch dim, the trust-region radii applied as a [B] vector.
+            # Bit-equal to the per-leaf path on the jnp reference path.
             def lmo_leaf(lp, x, g):
                 d = lmo_direction(g, lp.meta.lmo, ns_steps=cfg.ns_steps,
                                   use_pallas=cfg.use_pallas)
@@ -239,7 +251,28 @@ class EF21Muon:
                 return (x.astype(jnp.float32)
                         + radius * d.astype(jnp.float32)).astype(x.dtype)
 
-            x_l = plan.map_flat(lmo_leaf, plan.flatten(state["x"]), gs_l)
+            x_flat = plan.flatten(state["x"])
+            if cfg.ns_bucketing:
+                buckets = plan.ns_buckets()
+                bucketed = {i for b in buckets for i in b.leaf_ids}
+                x_l = [
+                    x if i in bucketed else
+                    vmap_n(partial(lmo_leaf, lp), lp.meta.stack_dims)(x, g)
+                    for i, (lp, x, g) in enumerate(
+                        zip(plan.leaves, x_flat, gs_l))]
+                for b in buckets:
+                    g_b = b.stack([gs_l[i] for i in b.leaf_ids])
+                    d_b = lmo_direction_batched(
+                        g_b, ns_steps=cfg.ns_steps,
+                        use_pallas=cfg.use_pallas)
+                    x_b = b.stack([x_flat[i] for i in b.leaf_ids],
+                                  dtype=jnp.float32)
+                    x_b = x_b + (b.radius_vector(t)[:, None, None]
+                                 * d_b.astype(jnp.float32))
+                    for i, piece in zip(b.leaf_ids, b.unstack(x_b)):
+                        x_l[i] = piece.astype(x_flat[i].dtype)
+            else:
+                x_l = plan.map_flat(lmo_leaf, x_flat, gs_l)
 
             new_state = {
                 "step": state["step"] + 1,

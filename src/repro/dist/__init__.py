@@ -1,4 +1,5 @@
 # Distribution layer: mesh partition rules + layer-wise optimizer plumbing.
+from .bucketing import NSBucket, build_buckets
 from .layerwise import LayerPlan, LeafPlan, resolve_compressor, vmap_n
 from .sharding import (batch_pspec, n_workers_for, param_pspec, param_pspecs,
                        serve_pspecs, state_pspecs, to_shardings,
@@ -6,6 +7,7 @@ from .sharding import (batch_pspec, n_workers_for, param_pspec, param_pspecs,
 
 __all__ = [
     "LayerPlan", "LeafPlan", "resolve_compressor", "vmap_n",
+    "NSBucket", "build_buckets",
     "param_pspec", "param_pspecs", "state_pspecs", "batch_pspec",
     "serve_pspecs", "to_shardings", "worker_axis_for", "n_workers_for",
 ]

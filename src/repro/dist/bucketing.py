@@ -1,0 +1,113 @@
+"""Shape-bucketed Newton-Schulz dispatch (DESIGN.md §7).
+
+A transformer has dozens of identically-shaped spectral matrices
+(attention projections, MLP in/out, per layer), but phase 5 of the
+optimizer used to lower one independent NS chain per leaf. This module
+groups the spectral leaves of a ``LayerPlan`` into **shape buckets** so
+the step runs ONE batched NS dispatch chain per distinct slice shape:
+
+  * the bucket key is the *canonical* slice shape ``(m, n)`` with
+    ``m <= n`` — a ``[768, 3072]`` up-projection and a ``[3072, 768]``
+    down-projection land in the same bucket, with a per-leaf transpose
+    flag recording the orientation fix applied during stacking;
+  * stacked leaves (``stack_dims > 0``, e.g. ``[L, ...]`` layer stacks or
+    ``[L, E, ...]`` expert stacks) fold their stack dims into the batch
+    dimension natively — a single ``reshape`` instead of nested vmaps, so
+    the whole stack rides one batched kernel grid;
+  * per-bucket static metadata includes the per-slice LMO radius scales
+    as a length-``batch`` vector, so the trust-region update is applied
+    batched too.
+
+``stack``/``unstack`` are exact inverses (transpose + reshape only, no
+arithmetic), so the bucketed step stays bit-equal to the per-leaf step on
+the jnp path — asserted in tests/test_ns_bucketing.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class NSBucket:
+    """Static description of one shape bucket of spectral leaves."""
+    shape: tuple[int, int]             # canonical slice shape, m <= n
+    leaf_ids: tuple[int, ...]          # indices into plan.leaves (treedef order)
+    leaf_shapes: tuple[tuple[int, ...], ...]  # full leaf shapes (with stack)
+    transposes: tuple[bool, ...]       # per leaf: slice stored as [n, m]
+    counts: tuple[int, ...]            # per leaf: n_stack slices contributed
+    radius_scales: tuple[float, ...]   # per slice, len == batch
+
+    @property
+    def batch(self) -> int:
+        return sum(self.counts)
+
+    # ------------------------------------------------------------ stacking
+    def stack(self, leaves: list[jax.Array], dtype=None) -> jax.Array:
+        """Fold per-leaf arrays ``[*stack, s0, s1]`` into one canonical
+        ``[batch, m, n]`` stack: reshape the stack dims into the batch dim,
+        swap the trailing axes of transposed leaves, concatenate in
+        ``leaf_ids`` order. Transpose + reshape only — value-exact."""
+        parts = []
+        for x, tr in zip(leaves, self.transposes):
+            x = x.reshape((-1,) + x.shape[x.ndim - 2:])
+            if tr:
+                x = jnp.swapaxes(x, -1, -2)
+            parts.append(x if dtype is None else x.astype(dtype))
+        if len({p.dtype for p in parts}) > 1:
+            raise TypeError(
+                f"NSBucket.stack: mixed leaf dtypes "
+                f"{[str(p.dtype) for p in parts]} — pass dtype= to unify")
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+    def unstack(self, batch: jax.Array) -> list[jax.Array]:
+        """Exact inverse of ``stack`` (up to dtype, which the caller
+        restores): split the batch dim back into per-leaf slabs, undo the
+        orientation swap, restore the stack dims."""
+        out, off = [], 0
+        for full_shape, tr, cnt in zip(self.leaf_shapes, self.transposes,
+                                       self.counts):
+            piece = jax.lax.slice_in_dim(batch, off, off + cnt, axis=0)
+            off += cnt
+            if tr:
+                piece = jnp.swapaxes(piece, -1, -2)
+            out.append(piece.reshape(full_shape))
+        return out
+
+    def radius_vector(self, t) -> jax.Array:
+        """Per-slice trust-region radii ``t * scale_i`` as a [batch] f32
+        vector (broadcast over the stacked update)."""
+        scales = jnp.asarray(self.radius_scales, jnp.float32)
+        return jnp.asarray(t, jnp.float32) * scales
+
+
+def build_buckets(plan) -> tuple[NSBucket, ...]:
+    """Group the spectral 2-D leaves of a LayerPlan by canonical slice
+    shape. Deterministic: buckets sorted by shape, leaves in treedef
+    order within a bucket. Non-spectral leaves (and any spectral leaf
+    without a 2-D slice, which the per-leaf LMO would reject anyway) are
+    left to the per-leaf path."""
+    groups: dict[tuple[int, int], list] = {}
+    for i, lp in enumerate(plan.leaves):
+        if lp.meta.lmo != "spectral" or len(lp.slice_shape) != 2:
+            continue
+        s0, s1 = lp.slice_shape
+        tr = s0 > s1
+        key = (s1, s0) if tr else (s0, s1)
+        groups.setdefault(key, []).append((i, lp, tr))
+    buckets = []
+    for key in sorted(groups):
+        members = groups[key]
+        scales = []
+        for _, lp, _ in members:
+            scales.extend([float(lp.meta.radius_scale)] * lp.n_stack)
+        buckets.append(NSBucket(
+            shape=key,
+            leaf_ids=tuple(i for i, _, _ in members),
+            leaf_shapes=tuple(lp.shape for _, lp, _ in members),
+            transposes=tuple(tr for _, _, tr in members),
+            counts=tuple(lp.n_stack for _, lp, _ in members),
+            radius_scales=tuple(scales)))
+    return tuple(buckets)

@@ -74,6 +74,7 @@ class LayerPlan:
         self.treedef = treedef
         self.leaves = leaves
         self._wire_layouts: dict = {}   # wire-dtype name -> WireLayout
+        self._ns_buckets: tuple | None = None
 
     @classmethod
     def build(cls, params: Any, metas: Any, w2s: str = "identity",
@@ -135,6 +136,17 @@ class LayerPlan:
         """Uncompressed wire cost of the same message."""
         return dense_payload_bytes((lp.shape for lp in self.leaves),
                                    wire_dtype)
+
+    # ------------------------------------------------------- NS bucketing
+    def ns_buckets(self) -> tuple:
+        """Shape buckets over the spectral leaves (DESIGN.md §7) — the
+        static grouping behind the batched Newton-Schulz dispatch in
+        phase 5 of the optimizer. Built once per plan."""
+        from repro.dist.bucketing import build_buckets
+
+        if self._ns_buckets is None:
+            self._ns_buckets = build_buckets(self)
+        return self._ns_buckets
 
     def wire_layout(self, wire_dtype):
         """The static WireLayout (repro.wire) for this plan: the offset

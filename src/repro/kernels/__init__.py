@@ -7,9 +7,12 @@
 # wrapper with a CPU fallback.
 from .bitpack import (narrow_decode, narrow_encode, narrow_width, pack_bits,
                       unpack_bits)
-from .ops import (NS_COEFFS, natural_compress, natural_decompress,
-                  newton_schulz)
+from .newton_schulz import fused_ns_feasible
+from .ops import (NS_COEFFS, count_ns_dispatches, natural_compress,
+                  natural_decompress, newton_schulz, newton_schulz_batched)
 
 __all__ = ["NS_COEFFS", "natural_compress", "natural_decompress",
-           "newton_schulz", "pack_bits", "unpack_bits", "narrow_encode",
-           "narrow_decode", "narrow_width"]
+           "newton_schulz", "newton_schulz_batched", "fused_ns_feasible",
+           "count_ns_dispatches",
+           "pack_bits", "unpack_bits", "narrow_encode", "narrow_decode",
+           "narrow_width"]

@@ -1,13 +1,22 @@
 """Pallas TPU kernels for Newton-Schulz orthogonalisation (Muon's hot spot).
 
-Two kernels built on one blocked-matmul body with explicit BlockSpec VMEM
-tiling and an f32 VMEM accumulator:
+Two generations of kernels:
 
-  * ``fused_matmul``: ``out = alpha * C + beta * (A @ B)`` — the workhorse.
-    One NS iteration is three chained calls:
+  * ``fused_matmul``: ``out = alpha * C + beta * (A @ B)`` — the original
+    blocked-matmul workhorse. One NS iteration is three chained calls:
         gram = X @ X^T                       (fused_matmul(X, X^T))
         poly = b*gram + c*(gram @ gram)      (fused_matmul(gram, gram, C=gram, alpha=b, beta=c))
         X'   = a*X + poly @ X                (fused_matmul(poly, X, C=X, alpha=a))
+    The ``gram``/``poly`` intermediates round-trip through HBM between the
+    three pallas_calls.
+
+  * ``ns_iteration_fused``: ONE pallas_call per NS iteration over a whole
+    ``[B, m, n]`` stack of independent slices (DESIGN.md §7). The gram and
+    the quintic polynomial live in ``[m, m]`` f32 VMEM scratch for the
+    entire iteration — they never touch HBM — and the batch is a parallel
+    grid dimension, so a shape bucket of identically-shaped layers is one
+    dispatch chain of ``ns_steps`` kernels instead of ``3 * ns_steps``
+    kernels *per layer*.
 
 Design notes (TPU adaptation):
   * blocks default to (128, 128, 128): MXU-aligned on all three matmul dims;
@@ -18,6 +27,12 @@ Design notes (TPU adaptation):
   * shapes are padded to block multiples by the ops.py wrapper; zero padding
     is exact for NS (padded rows/cols stay exactly zero through the
     polynomial), verified in tests.
+  * the fused kernel accumulates only the upper-triangular tiles of the
+    symmetric gram ``X X^T`` and mirrors the lower triangle once per
+    iteration — T(T+1)/2 instead of T^2 tile matmuls on the gram phase.
+  * the fused kernel needs ``2 * 4 * m^2`` bytes of VMEM scratch;
+    ``fused_ns_feasible`` gates it, the ops.py wrapper falls back to the
+    three-call chain for slices whose gram does not fit.
 """
 from __future__ import annotations
 
@@ -117,3 +132,121 @@ def ns_iteration_pallas(x: jax.Array, coeffs, *, block: int = 128,
                        block_m=block, block_n=block, block_k=block,
                        out_dtype=x.dtype, interpret=interpret)
     return out
+
+
+# ------------------------------------------------------- fused NS iteration
+
+# VMEM budget for the fused kernel (of ~16 MB/core): 2 f32 [m, m] scratch
+# buffers + double-buffered in/out [m, block_n] tiles must fit.
+_FUSED_VMEM_BUDGET = 12 * 1024 * 1024
+
+_CONTRACT_LAST = (((1,), (1,)), ((), ()))   # A @ B^T on [p, k] x [q, k]
+
+
+def fused_ns_vmem_bytes(m: int, block_n: int, itemsize: int) -> int:
+    """VMEM bytes the fused iteration kernel needs for ``[*, m, n]``
+    slices: gram + poly scratch (f32) plus double-buffered X/X' tiles."""
+    scratch = 2 * 4 * m * m
+    tiles = 2 * 2 * m * block_n * max(itemsize, 4)
+    return scratch + tiles
+
+
+def fused_ns_feasible(m: int, block_n: int = 128, itemsize: int = 4) -> bool:
+    """Whether the whole [m, m] gram fits the fused kernel's VMEM budget
+    (the ops.py wrapper falls back to the three-call chain otherwise)."""
+    return fused_ns_vmem_bytes(m, block_n, itemsize) <= _FUSED_VMEM_BUDGET
+
+
+def _ns_fused_kernel(x_ref, o_ref, gram_ref, poly_ref, *, nj: int, nmt: int,
+                     block_m: int, a: float, b: float, c: float):
+    """One grid step of the fused iteration. Grid: (batch, phase, j).
+
+    phase 0 sweeps the n-tiles of X accumulating the upper-triangular
+    tiles of gram = X X^T in VMEM scratch; on the last n-tile it mirrors
+    the lower triangle and evaluates poly = b*gram + c*gram^2 into the
+    second scratch. phase 1 sweeps the n-tiles again emitting
+    X' = a*X + poly @ X. gram/poly never leave VMEM.
+    """
+    ph = pl.program_id(1)
+    j = pl.program_id(2)
+    x = x_ref[0]                               # [m, block_n]
+
+    @pl.when((ph == 0) & (j == 0))
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+
+    @pl.when(ph == 0)
+    def _gram():
+        # upper-triangular tile accumulation: gram is symmetric, so the
+        # T(T-1)/2 sub-diagonal tile matmuls are redundant and skipped.
+        for mi in range(nmt):
+            ri = slice(mi * block_m, (mi + 1) * block_m)
+            xi = x[ri, :]
+            for mj in range(mi, nmt):
+                rj = slice(mj * block_m, (mj + 1) * block_m)
+                gram_ref[ri, rj] += jax.lax.dot_general(
+                    xi, x[rj, :], _CONTRACT_LAST,
+                    preferred_element_type=jnp.float32)
+        # the out block is flushed each j-step either way; write the aX
+        # term so phase-0 flushes are deterministic (phase 1 overwrites).
+        o_ref[0] = (a * x.astype(jnp.float32)).astype(o_ref.dtype)
+
+    @pl.when((ph == 0) & (j == nj - 1))
+    def _poly():
+        for mi in range(nmt):
+            ri = slice(mi * block_m, (mi + 1) * block_m)
+            for mj in range(mi + 1, nmt):
+                rj = slice(mj * block_m, (mj + 1) * block_m)
+                gram_ref[rj, ri] = gram_ref[ri, rj].T
+        g = gram_ref[...]
+        poly_ref[...] = b * g + c * jnp.dot(
+            g, g, preferred_element_type=jnp.float32)
+
+    @pl.when(ph == 1)
+    def _update():
+        xf = x.astype(jnp.float32)
+        o_ref[0] = (a * xf + jnp.dot(
+            poly_ref[...], xf,
+            preferred_element_type=jnp.float32)).astype(o_ref.dtype)
+
+
+def ns_iteration_fused(x: jax.Array, coeffs, *, block_m: int = 128,
+                       block_n: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """One quintic NS iteration for a ``[B, m, n]`` stack in ONE pallas_call.
+
+    m % block_m == n % block_n == 0 (pad upstream); gram/poly stay in VMEM
+    (caller gates on ``fused_ns_feasible(m, block_n)``). The batch is a
+    parallel grid dim; phases and n-tiles are sequential, so the scratch
+    accumulator is re-initialised per batch element.
+    """
+    bsz, m, n = x.shape
+    if m % block_m or n % block_n:
+        raise ValueError(
+            f"ns_iteration_fused needs block-aligned slices, got {x.shape} "
+            f"for blocks ({block_m}, {block_n}) — pad upstream (ops.py)")
+    if _CompilerParams is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams in this jax version; the Pallas "
+            "Newton-Schulz path cannot be configured — pass "
+            "use_pallas=False (jnp reference) or update jax.")
+    a, b, c = coeffs
+    nj = n // block_n
+    kernel = functools.partial(
+        _ns_fused_kernel, nj=nj, nmt=m // block_m, block_m=block_m,
+        a=float(a), b=float(b), c=float(c))
+    spec = pl.BlockSpec((1, m, block_n), lambda bi, ph, j: (bi, 0, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, 2, nj),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((m, m), jnp.float32),
+                        pltpu.VMEM((m, m), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x)

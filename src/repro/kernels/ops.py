@@ -14,13 +14,41 @@ import jax.numpy as jnp
 from . import ref
 from .bitpack import pack_bits, unpack_bits
 from .natural_pack import natural_encode
-from .newton_schulz import ns_iteration_pallas
+from .newton_schulz import (fused_ns_feasible, ns_iteration_fused,
+                            ns_iteration_pallas)
 
 NS_COEFFS = ref.NS_COEFFS
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+NS_KERNEL_NAMES = ("_ns_fused_kernel", "_fused_matmul_kernel")
+
+
+def count_ns_dispatches(jaxpr, names=NS_KERNEL_NAMES) -> int:
+    """Recursively count NS pallas_call equations (fused or chained) in
+    a jaxpr — the traced dispatch count the bucketing regression test
+    and benchmarks/ns_bench.py both pin. Counts at trace level, so it
+    works on any backend (nothing is lowered or executed)."""
+    import jax.extend.core as jex
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            kname = getattr(eqn.params.get("name_and_src_info"), "name",
+                            None) or str(eqn.params.get("name", ""))
+            if any(s in kname for s in names):
+                n += 1
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for vi in vs:                 # lax.cond/switch keep a tuple
+                if isinstance(vi, jex.ClosedJaxpr):
+                    n += count_ns_dispatches(vi.jaxpr, names)
+                elif hasattr(vi, "eqns"):
+                    n += count_ns_dispatches(vi, names)
+    return n
 
 
 def _pad_to(x: jax.Array, mult: int) -> tuple[jax.Array, tuple[int, int]]:
@@ -34,12 +62,18 @@ def _pad_to(x: jax.Array, mult: int) -> tuple[jax.Array, tuple[int, int]]:
 
 def newton_schulz(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
                   eps: float = 1e-7, use_pallas: str | bool = "auto",
-                  block: int = 128, interpret: bool = False) -> jax.Array:
+                  block: int = 128, interpret: bool = False,
+                  fused: str | bool = "auto") -> jax.Array:
     """Orthogonalise ``g`` (approximate UV^T of its SVD).
 
     Pallas path: pad to MXU-aligned multiples of ``block``, run the quintic
     iteration with blocked VMEM matmuls, then slice back. Zero padding is
     exact (padded rows/cols remain zero through X' = aX + (bA + cA^2)X).
+
+    ``fused='auto'`` runs each iteration as ONE fused pallas_call (gram and
+    poly in VMEM scratch) whenever the [m, m] gram fits the VMEM budget,
+    falling back to the three-call chain; ``fused=False`` keeps the
+    three-call chain unconditionally (the pre-fusion A/B reference).
     """
     if g.ndim != 2:
         raise ValueError("newton_schulz expects 2-D input")
@@ -51,10 +85,59 @@ def newton_schulz(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
     x = g.T if transpose else g
     x = x / (jnp.linalg.norm(x.astype(jnp.float32)) + eps).astype(x.dtype)
     x, (m, n) = _pad_to(x, block)
+    if fused == "auto":
+        fused = fused_ns_feasible(x.shape[0], block, x.dtype.itemsize)
     for _ in range(steps):
-        x = ns_iteration_pallas(x, coeffs, block=block, interpret=interpret)
+        if fused:
+            x = ns_iteration_fused(x[None], coeffs, block_m=block,
+                                   block_n=block, interpret=interpret)[0]
+        else:
+            x = ns_iteration_pallas(x, coeffs, block=block,
+                                    interpret=interpret)
     x = x[:m, :n]
     return x.T if transpose else x
+
+
+def newton_schulz_batched(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
+                          eps: float = 1e-7,
+                          use_pallas: str | bool = "auto", block: int = 128,
+                          interpret: bool = False,
+                          fused: str | bool = "auto") -> jax.Array:
+    """Orthogonalise a ``[B, m, n]`` stack of independent slices.
+
+    The batched entry point behind shape bucketing (DESIGN.md §7): one
+    dispatch chain of ``steps`` fused kernels for the whole stack. Callers
+    canonicalise orientation (m <= n) before stacking — there is no
+    per-slice transpose handling here. The jnp path is the bit-matching
+    ``newton_schulz_batched_ref``; the Pallas path pads every slice to
+    ``block`` multiples (zero padding is exact, as in ``newton_schulz``)
+    and falls back to a vmapped three-call chain when the [m, m] gram
+    exceeds the fused kernel's VMEM budget (or ``fused=False``).
+    """
+    if g.ndim != 3:
+        raise ValueError("newton_schulz_batched expects [B, m, n]")
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.newton_schulz_batched_ref(g, steps=steps, coeffs=coeffs,
+                                             eps=eps)
+    nrm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                           axis=(-2, -1), keepdims=True))
+    x = g / (nrm + eps).astype(g.dtype)
+    m, n = x.shape[1:]
+    pm, pn = (-m) % block, (-n) % block
+    if pm or pn:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)))
+    if fused == "auto":
+        fused = fused_ns_feasible(x.shape[1], block, x.dtype.itemsize)
+    for _ in range(steps):
+        if fused:
+            x = ns_iteration_fused(x, coeffs, block_m=block, block_n=block,
+                                   interpret=interpret)
+        else:
+            x = jax.vmap(lambda s: ns_iteration_pallas(
+                s, coeffs, block=block, interpret=interpret))(x)
+    return x[:, :m, :n]
 
 
 def natural_compress(x: jax.Array, use_pallas: str | bool = "auto",

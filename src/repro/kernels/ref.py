@@ -49,6 +49,39 @@ def newton_schulz_ref(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
     return x.T if transpose else x
 
 
+def ns_iteration_batched_ref(x: jax.Array, coeffs=NS_COEFFS) -> jax.Array:
+    """Batched quintic NS iteration over a [B, m, n] slice stack.
+
+    Native batched matmuls — traces to exactly the dot_generals that
+    ``jax.vmap(ns_iteration_ref)`` produces, so it stays bit-identical to
+    the per-slice oracle (asserted in tests/test_ns_bucketing.py).
+    """
+    a, b, c = coeffs
+    xf = x.astype(jnp.float32)
+    gram = xf @ jnp.swapaxes(xf, -1, -2)
+    poly = b * gram + c * (gram @ gram)
+    return (a * xf + poly @ xf).astype(x.dtype)
+
+
+def newton_schulz_batched_ref(g: jax.Array, steps: int = 5,
+                              coeffs=NS_COEFFS,
+                              eps: float = 1e-7) -> jax.Array:
+    """Batched orthogonalisation oracle over [B, m, n] slice stacks.
+
+    No transpose handling: the bucketing layer (repro.dist.bucketing)
+    canonicalises every slice to m <= n before stacking. Per-slice f32
+    Frobenius normalisation matches ``newton_schulz_ref`` bit-for-bit.
+    """
+    if g.ndim != 3:
+        raise ValueError("newton_schulz_batched_ref expects [B, m, n]")
+    nrm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                           axis=(-2, -1), keepdims=True))
+    x = g / (nrm + eps).astype(g.dtype)
+    for _ in range(steps):
+        x = ns_iteration_batched_ref(x, coeffs)
+    return x
+
+
 def natural_compress_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Deterministic natural compression of bf16 values: round to the
     nearest power of two. Returns (exp_code uint8, sign uint8 in {0,1}).

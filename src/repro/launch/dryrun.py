@@ -82,7 +82,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                w2s: str = "rank10", tag: str = "baseline",
                fsdp: bool | None = None, beta: float = 0.1,
                s2w: str = "identity", pad_heads: int | None = None,
-               zero1_lmo: bool = False, wire_pack: bool = True):
+               zero1_lmo: bool = False, wire_pack: bool = True,
+               ns_bucketing: bool = True):
     """Lower + compile one (arch, shape, mesh). Returns the record dict."""
     import dataclasses
     cfg = get_config(arch)
@@ -114,7 +115,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         tr = Trainer(model, TrainerConfig(
             n_workers=n_w, beta=beta, w2s=w2s, s2w=s2w, fsdp=use_fsdp,
             use_pallas=False, zero1_lmo=zero1_lmo,
-            wire_pack=wire_pack), mesh=mesh)
+            wire_pack=wire_pack, ns_bucketing=ns_bucketing), mesh=mesh)
         # wire accounting: analytic Table-2 bytes vs the exact bytes the
         # fused payload buffer moves (compare with the measured
         # u8_coll_bytes parsed from the compiled HLO below; that
@@ -125,7 +126,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         wire_dt = tr.opt.cfg.wire_dtype
         rec.update(w2s_bytes_analytic=plan.w2s_bytes_per_worker(wire_dt),
                    w2s_bytes_wire=plan.wire_layout(wire_dt).total_nbytes,
-                   wire_pack=wire_pack)
+                   wire_pack=wire_pack, ns_bucketing=ns_bucketing,
+                   ns_buckets=len(plan.ns_buckets()))
         batch = input_specs(cfg, shape, n_workers=n_w)
         state = tr.state_shapes()
         jitted = tr.jit_step(batch)
@@ -217,6 +219,9 @@ def main():
     ap.add_argument("--no-wire-pack", action="store_true",
                     help="ship the unpacked payload pytree (per-leaf "
                          "collectives) instead of the fused wire buffer")
+    ap.add_argument("--no-ns-bucketing", action="store_true",
+                    help="per-leaf Newton-Schulz chains instead of the "
+                         "shape-bucketed batched dispatch (DESIGN.md §7)")
     ap.add_argument("--out", default=RESULTS)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -244,7 +249,8 @@ def main():
                                      w2s=args.w2s, tag=args.tag, fsdp=fsdp,
                                      s2w=args.s2w, pad_heads=args.pad_heads,
                                      zero1_lmo=args.zero1,
-                                     wire_pack=not args.no_wire_pack)
+                                     wire_pack=not args.no_wire_pack,
+                                     ns_bucketing=not args.no_ns_bucketing)
                 except Exception as e:
                     rec = {"arch": arch, "shape": shape, "mesh": mesh,
                            "tag": args.tag, "status": "error",

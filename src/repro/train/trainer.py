@@ -50,6 +50,7 @@ class TrainerConfig:
     use_pallas: Any = "auto"
     zero1_lmo: bool = False   # beyond-paper: layer-parallel LMO sharding
     wire_pack: bool = True    # fused uint8 payload buffer (repro.wire)
+    ns_bucketing: bool = True  # shape-bucketed batched NS LMOs (§7)
 
 
 class Trainer:
@@ -60,7 +61,8 @@ class Trainer:
         self.opt = EF21Muon(EF21MuonConfig(
             n_workers=tcfg.n_workers, beta=tcfg.beta, w2s=tcfg.w2s,
             s2w=tcfg.s2w, ns_steps=tcfg.ns_steps,
-            use_pallas=tcfg.use_pallas, wire_pack=tcfg.wire_pack))
+            use_pallas=tcfg.use_pallas, wire_pack=tcfg.wire_pack,
+            ns_bucketing=tcfg.ns_bucketing))
         # metas are static: build once from the model's abstract init
         from repro.models.api import abstract_params
         self._params_shapes, self.metas = abstract_params(model)

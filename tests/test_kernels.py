@@ -9,9 +9,10 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
-from repro.kernels.newton_schulz import fused_matmul, ns_iteration_pallas
+from repro.kernels.newton_schulz import (fused_matmul, ns_iteration_fused,
+                                         ns_iteration_pallas)
 from repro.kernels.ops import natural_compress, natural_decompress, \
-    newton_schulz
+    newton_schulz, newton_schulz_batched
 
 
 @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384),
@@ -56,6 +57,64 @@ def test_newton_schulz_pallas_vs_oracle(shape, key):
     want = ref.newton_schulz_ref(g, steps=5)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
                                atol=2e-3)
+
+
+@pytest.mark.parametrize("bsz,m,n", [(2, 128, 256), (3, 256, 128),
+                                     (1, 384, 384), (2, 256, 640)])
+def test_ns_iteration_fused_matches_batched_ref(bsz, m, n, key):
+    """ONE fused pallas_call (gram + poly + update in VMEM, symmetric
+    gram tiles skipped) == the batched jnp iteration, multi-tile m
+    included (exercises the triangular accumulate + mirror)."""
+    x = jax.random.normal(key, (bsz, m, n), jnp.float32) * 0.05
+    got = ns_iteration_fused(x, ref.NS_COEFFS, interpret=True)
+    want = ref.ns_iteration_batched_ref(x, ref.NS_COEFFS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ns_iteration_fused_bf16(key):
+    x = (jax.random.normal(key, (2, 128, 128)) * 0.05).astype(jnp.bfloat16)
+    got = ns_iteration_fused(x, ref.NS_COEFFS, interpret=True)
+    want = ref.ns_iteration_batched_ref(x, ref.NS_COEFFS)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bsz,m,n", [(3, 96, 160), (2, 200, 120),
+                                     (1, 128, 128), (4, 13, 77)])
+def test_newton_schulz_batched_pallas_vs_oracle(bsz, m, n, key):
+    """Batched Pallas path (zero-padded to 128 blocks, fused iteration)
+    == batched jnp oracle, any slice shape."""
+    g = jax.random.normal(key, (bsz, m, n), jnp.float32)
+    got = newton_schulz_batched(g, steps=5, use_pallas=True, interpret=True)
+    want = ref.newton_schulz_batched_ref(g, steps=5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_newton_schulz_batched_unfused_fallback(key):
+    """fused=False (the VMEM-infeasible fallback: vmapped three-call
+    chain) computes the same batched result."""
+    g = jax.random.normal(key, (2, 96, 160), jnp.float32)
+    got = newton_schulz_batched(g, steps=3, use_pallas=True, interpret=True,
+                                fused=False)
+    want = ref.newton_schulz_batched_ref(g, steps=3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_newton_schulz_fused_equals_chain(key):
+    """The fused iteration and the three-call chain are the same
+    algorithm: 2-D entry point, both pallas variants vs each other."""
+    g = jax.random.normal(key, (100, 60), jnp.float32)
+    a = newton_schulz(g, steps=3, use_pallas=True, interpret=True,
+                      fused=True)
+    b = newton_schulz(g, steps=3, use_pallas=True, interpret=True,
+                      fused=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_newton_schulz_orthogonalises(key):

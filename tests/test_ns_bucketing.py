@@ -1,0 +1,285 @@
+"""Shape-bucketed batched Newton-Schulz (DESIGN.md §7): bucket formation,
+stack/unstack exactness, bucketed-vs-per-leaf step bit-equality on the
+jnp path, and the dispatch-count regression the whole refactor exists
+for (ns_steps x n_buckets fused pallas_calls instead of
+3 x ns_steps x n_spectral_leaves)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.core.lmo import lmo_direction, lmo_direction_batched
+from repro.core.muon import EF21Muon, EF21MuonConfig, ParamMeta
+from repro.dist.bucketing import build_buckets
+from repro.dist.layerwise import LayerPlan
+from repro.kernels import ref
+from repro.kernels.ops import (count_ns_dispatches, newton_schulz,
+                               newton_schulz_batched)
+from repro.models.api import abstract_params, build_model
+
+
+# --------------------------------------------------------- a small test tree
+
+def _tiny_tree(key):
+    """Hand-sized params/metas covering every bucketing case: same-shape
+    group, transposed pair sharing a bucket, a stacked leaf folding into
+    the batch dim, and non-spectral leaves left to the per-leaf path."""
+    ks = jax.random.split(key, 6)
+    params = {
+        "wq": jax.random.normal(ks[0], (48, 32)),
+        "wk": jax.random.normal(ks[1], (48, 32)),
+        "w_in": jax.random.normal(ks[2], (32, 80)),
+        "w_out": jax.random.normal(ks[3], (80, 32)),
+        "blocks": jax.random.normal(ks[4], (3, 48, 32)),
+        "bias": jax.random.normal(ks[5], (32,)),
+    }
+    metas = {
+        "wq": ParamMeta("spectral", 1.0, 0),
+        "wk": ParamMeta("spectral", 1.0, 0),
+        "w_in": ParamMeta("spectral", 1.5, 0),
+        "w_out": ParamMeta("spectral", 1.0, 0),
+        "blocks": ParamMeta("spectral", 2.0, 1),
+        "bias": ParamMeta("sign", 1.0, 0, compressible=False),
+    }
+    return params, metas
+
+
+def test_bucket_formation(key):
+    params, metas = _tiny_tree(key)
+    plan = LayerPlan.build(params, metas)
+    buckets = plan.ns_buckets()
+    assert buckets is plan.ns_buckets()          # memoised
+    by_shape = {b.shape: b for b in buckets}
+    assert set(by_shape) == {(32, 48), (32, 80)}
+    b1 = by_shape[(32, 48)]                       # canonical m <= n
+    # treedef (dict-key) order: bias, blocks, w_in, w_out, wk, wq
+    names = [plan.leaves[i].shape for i in b1.leaf_ids]
+    assert b1.batch == 5                          # 3 (stack) + wk + wq
+    assert b1.counts == (3, 1, 1)
+    assert all(b1.transposes)                     # all stored [48, 32]
+    assert b1.radius_scales == (2.0, 2.0, 2.0, 1.0, 1.0)
+    assert names == [(3, 48, 32), (48, 32), (48, 32)]
+    b2 = by_shape[(32, 80)]
+    assert b2.batch == 2 and b2.transposes == (False, True)
+    assert b2.radius_scales == (1.5, 1.0)
+    # the sign vector is not bucketed
+    bucketed = {i for b in buckets for i in b.leaf_ids}
+    vector_ids = {i for i, lp in enumerate(plan.leaves)
+                  if lp.meta.lmo != "spectral"}
+    assert bucketed.isdisjoint(vector_ids)
+
+
+def test_stack_unstack_roundtrip_exact(key):
+    params, metas = _tiny_tree(key)
+    plan = LayerPlan.build(params, metas)
+    flat = plan.flatten(params)
+    for b in plan.ns_buckets():
+        stacked = b.stack([flat[i] for i in b.leaf_ids])
+        assert stacked.shape == (b.batch,) + b.shape
+        back = b.unstack(stacked)
+        for i, piece in zip(b.leaf_ids, back):
+            np.testing.assert_array_equal(np.asarray(piece),
+                                          np.asarray(flat[i]))
+
+
+@given(m=st.integers(4, 40), n=st.integers(4, 40), stack=st.integers(1, 3),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_stack_unstack_roundtrip_property(m, n, stack, seed):
+    """stack -> unstack is the identity for arbitrary orientations and
+    stack depths (transpose + reshape only, no arithmetic)."""
+    k = jax.random.key(seed)
+    params = {"a": jax.random.normal(k, (m, n)),
+              "b": jax.random.normal(k, (n, m)),
+              "s": jax.random.normal(k, (stack, m, n))}
+    metas = {n_: ParamMeta("spectral", 1.0, 1 if n_ == "s" else 0)
+             for n_ in params}
+    plan = LayerPlan.build(params, metas)
+    buckets = plan.ns_buckets()
+    assert sum(b.batch for b in buckets) == stack + 2
+    flat = plan.flatten(params)
+    for b in buckets:
+        back = b.unstack(b.stack([flat[i] for i in b.leaf_ids]))
+        for i, piece in zip(b.leaf_ids, back):
+            np.testing.assert_array_equal(np.asarray(piece),
+                                          np.asarray(flat[i]))
+
+
+# ------------------------------------------------- jnp-path bit equivalence
+
+def test_batched_ref_bit_matches_per_slice(key):
+    """newton_schulz_batched_ref == per-slice newton_schulz_ref, bitwise,
+    for canonical (m <= n) stacks — the invariant the step equivalence
+    rests on."""
+    per_slice = jax.jit(lambda x: ref.newton_schulz_ref(x, steps=5))
+    for shape in [(4, 96, 160), (3, 64, 64), (2, 13, 77)]:
+        g = jax.random.normal(key, shape, jnp.float32)
+        got = jax.jit(lambda x: ref.newton_schulz_batched_ref(x, steps=5))(g)
+        want = jnp.stack([per_slice(g[i]) for i in range(shape[0])])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lmo_direction_batched_bit_matches_per_slice(key):
+    g = jax.random.normal(key, (3, 48, 64), jnp.float32)
+    got = jax.jit(lambda x: lmo_direction_batched(x, use_pallas=False))(g)
+    per_slice = jax.jit(
+        lambda x: lmo_direction(x, "spectral", use_pallas=False))
+    want = jnp.stack([per_slice(g[i]) for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(ValueError):
+        lmo_direction_batched(g, kind="sign")
+    with pytest.raises(ValueError):
+        lmo_direction_batched(g[0])
+
+
+def _quadratic_grad(params, batch):
+    loss = sum(jnp.sum(jnp.square(p.astype(jnp.float32) - batch))
+               for p in jax.tree.leaves(params))
+    grads = jax.tree.map(
+        lambda p: 2.0 * (p.astype(jnp.float32) - batch), params)
+    return loss, grads
+
+
+def test_bucketed_step_bit_equal_per_leaf(key):
+    """EF21-Muon step with ns_bucketing on == off, bit-for-bit, on the
+    jnp path (the acceptance invariant: bucketing is a pure dispatch
+    transformation)."""
+    params, metas = _tiny_tree(key)
+    batch = jnp.ones((2, 1)) * 0.1     # [n_workers, ...] broadcastable
+    states = {}
+    for bucketing in (True, False):
+        opt = EF21Muon(EF21MuonConfig(n_workers=2, w2s="top10",
+                                      ns_bucketing=bucketing))
+        state = opt.init(key, params, metas)
+        step = opt.make_step(metas)
+        state, aux = jax.jit(
+            lambda s, b: step(s, _quadratic_grad, b, 0.05))(state, batch)
+        assert np.isfinite(float(aux["loss"]))
+        states[bucketing] = state
+    for field in ("x", "g_server", "g_w"):
+        same = jax.tree.map(lambda a, b: bool(jnp.all(a == b)),
+                            states[True][field], states[False][field])
+        assert all(jax.tree.leaves(same)), (field, same)
+
+
+# ------------------------------------------------ dispatch-count regression
+
+def test_step_dispatch_count_regression(key):
+    """The HLO-level win, pinned at trace level: with ns_bucketing the
+    step emits at most ns_steps x n_buckets NS pallas_calls; without it,
+    ns_steps x n_spectral_leaves (fused per-leaf); the pre-fusion chain
+    was 3 x ns_steps x n_spectral_leaves (pinned in
+    test_unfused_chain_dispatch_count)."""
+    params, metas = _tiny_tree(key)
+    batch = jnp.ones((1, 1)) * 0.1
+    counts = {}
+    for bucketing in (True, False):
+        opt = EF21Muon(EF21MuonConfig(n_workers=1, w2s="top10",
+                                      use_pallas=True,
+                                      ns_bucketing=bucketing))
+        state = opt.init(key, params, metas)
+        step = opt.make_step(metas)
+        jaxpr = jax.make_jaxpr(
+            lambda s, b: step(s, _quadratic_grad, b, 0.05))(state, batch)
+        counts[bucketing] = count_ns_dispatches(jaxpr.jaxpr)
+    plan = LayerPlan.build(params, metas)
+    n_buckets = len(plan.ns_buckets())
+    n_spectral = sum(1 for lp in plan.leaves if lp.meta.lmo == "spectral")
+    ns_steps = 5
+    assert counts[True] <= ns_steps * n_buckets, counts
+    assert counts[False] == ns_steps * n_spectral, counts
+    assert counts[True] < counts[False]
+
+
+def test_unfused_chain_dispatch_count(key):
+    """fused=False preserves the pre-fusion 3-calls-per-iteration chain
+    (the A/B baseline the ISSUE counts against)."""
+    g = jnp.zeros((96, 160))
+    for fused, expect in ((False, 3 * 5), ("auto", 5)):
+        jaxpr = jax.make_jaxpr(lambda x: newton_schulz(
+            x, steps=5, use_pallas=True, fused=fused))(g)
+        assert count_ns_dispatches(jaxpr.jaxpr) == expect, fused
+    jaxpr = jax.make_jaxpr(lambda x: newton_schulz_batched(
+        x, steps=5, use_pallas=True))(jnp.zeros((7, 96, 160)))
+    assert count_ns_dispatches(jaxpr.jaxpr) == 5   # batch rides the grid
+
+
+def test_infeasible_gram_falls_back_to_chain(key):
+    """Slices whose [m, m] gram exceeds the fused VMEM budget fall back
+    to the three-call chain instead of a miscompiled kernel."""
+    from repro.kernels.newton_schulz import fused_ns_feasible
+    assert fused_ns_feasible(768, 128, 4)
+    assert not fused_ns_feasible(4096, 128, 4)
+    g = jnp.zeros((4096, 4224))
+    jaxpr = jax.make_jaxpr(lambda x: newton_schulz(
+        x, steps=2, use_pallas=True))(g)
+    assert count_ns_dispatches(jaxpr.jaxpr) == 3 * 2
+
+
+@pytest.mark.slow
+def test_nanogpt_step_dispatch_count():
+    """Acceptance pin on the paper's model: a traced nanogpt-124m step
+    with ns_bucketing emits at most ns_steps x n_buckets NS kernels
+    (benchmarks/ns_bench.py records the same numbers in BENCH_ns.json)."""
+    cfg = get_config("nanogpt-124m")
+    model = build_model(cfg)
+    shapes, metas = abstract_params(model)
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    opt = EF21Muon(EF21MuonConfig(n_workers=1, w2s="top10",
+                                  use_pallas=True, ns_bucketing=True))
+    state = opt.init(jax.random.key(0), params, metas)
+    step = opt.make_step(metas)
+
+    def gl(p, batch):
+        return jax.value_and_grad(lambda q: model.loss(q, batch))(p)
+
+    batch = {"tokens": jnp.zeros((1, 1, 16), jnp.int32),
+             "labels": jnp.zeros((1, 1, 16), jnp.int32)}
+    jaxpr = jax.make_jaxpr(lambda s, b: step(s, gl, b, 0.01))(state, batch)
+    plan = opt.plan(params, metas)
+    n_buckets = len(plan.ns_buckets())
+    assert count_ns_dispatches(jaxpr.jaxpr) <= 5 * n_buckets
+
+
+# ------------------------------------------------------ padding exactness
+
+@given(bsz=st.integers(1, 3), m=st.integers(3, 140), n=st.integers(3, 140),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=6, deadline=None)
+def test_bucketed_padding_exactness_property(bsz, m, n, seed):
+    """Pallas (interpret) batched NS on zero-padded non-multiple-of-128
+    stacks matches the unpadded batched oracle — padding is exact through
+    the fused iteration, any shape."""
+    g = jax.random.normal(jax.random.key(seed), (bsz, m, n), jnp.float32)
+    got = newton_schulz_batched(g, steps=3, use_pallas=True, interpret=True)
+    want = ref.newton_schulz_batched_ref(g, steps=3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------ LRU plan cache
+
+def test_plan_cache_lru_eviction(key):
+    """Shape sweeps evict the oldest plan only — the 8 most recent stay
+    live (was: wholesale clear())."""
+    opt = EF21Muon(EF21MuonConfig())
+    meta = ParamMeta("spectral", 1.0, 0)
+    plans = []
+    for i in range(9):
+        p = {"w": jnp.zeros((8 + i, 8))}
+        plans.append(opt.plan(p, {"w": meta}))
+    assert len(opt._plans) == 8
+    # 0 evicted, 1..8 still cached (identity-stable)
+    assert opt.plan({"w": jnp.zeros((9, 8))}, {"w": meta}) is plans[1]
+    assert opt.plan({"w": jnp.zeros((16, 8))}, {"w": meta}) is plans[8]
+    new0 = opt.plan({"w": jnp.zeros((8, 8))}, {"w": meta})
+    assert new0 is not plans[0]
+    # the new0 insert evicted 2; cache now holds (oldest first):
+    # 3, 4, 5, 6, 7, 1, 8, 0'. A hit refreshes recency: touch 3 (the
+    # next eviction candidate) — the next insert then evicts 4, not 3.
+    assert opt.plan({"w": jnp.zeros((11, 8))}, {"w": meta}) is plans[3]
+    opt.plan({"w": jnp.zeros((99, 8))}, {"w": meta})   # evicts 4
+    assert opt.plan({"w": jnp.zeros((11, 8))}, {"w": meta}) is plans[3]
+    assert opt.plan({"w": jnp.zeros((12, 8))}, {"w": meta}) is not plans[4]
