@@ -21,6 +21,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -138,12 +141,141 @@ def run(fast: bool = False):
     return rows
 
 
+# ------------------------------------------------- SPMD flop-ratio A/B
+#
+# The sharding-awareness regression guard: a small-mesh (8 emulated host
+# devices) dry-run A/B of the EF21-Muon step with NS bucketing on vs
+# off, per-device HLO FLOPs from the compiled modules. Without the
+# ns_bucket_pspec constraints the bucket concat drops the per-leaf
+# TP/zero-1 shardings and this ratio regresses hard (the 512-chip
+# granite dry-run measured 1.137x; with the constraints it is < 1 —
+# batch sharding is parallelism the per-leaf path never had). Runs in a
+# subprocess so the 8-device XLA_FLAGS never leak into the caller.
+
+NS_SPMD_RATIO_BOUND = 1.02
+
+SPMD_AB_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+import sys
+sys.path.insert(0, "src")
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.data import SyntheticLM
+from repro.kernels import ref
+from repro.kernels.ops import newton_schulz_batched
+from repro.launch.hlo_cost import analyze
+from repro.models.api import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+cfg = get_config("granite-3-2b").reduced()
+model = build_model(cfg)
+shape = ShapeSpec("t", "train", 32, 8)
+rec = {}
+
+def arm(mesh, n_workers, bucketing):
+    tr = Trainer(model, TrainerConfig(
+        n_workers=n_workers, beta=0.5, w2s="top10+natural",
+        use_pallas=False, remat=False, zero1_lmo=True,
+        ns_bucketing=bucketing), mesh=mesh)
+    data = SyntheticLM(cfg, shape, n_workers=n_workers, seed=0)
+    batch = data.batch_at(0)
+    bshapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+    step = tr.jit_step(bshapes)
+    state = tr.init(jax.random.key(0))
+    state = jax.device_put(state, tr.shardings(bshapes)[0])
+    a = analyze(step.lower(state, batch, jnp.asarray(0.01, jnp.float32))
+                .compile().as_text())
+    state, aux = step(state, batch, 0.01)
+    wire = tr.layer_plan().wire_layout(tr.opt.cfg.wire_dtype).total_nbytes
+    return a, state, wire
+
+# mesh A (4 data x 2 model): per-device FLOP ratio + wire invariants.
+# TP splits NS contractions here, so cross-arm equality is approximate
+# (reduction order) — bitwise equality is asserted on mesh B below,
+# where every slice stays whole per device.
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+a_on, st_on, wire = arm(mesh, 4, True)
+a_off, st_off, _ = arm(mesh, 4, False)
+rec["flops_on"] = a_on["flops"]
+rec["flops_off"] = a_off["flops"]
+rec["ns_flops_ratio"] = a_on["flops"] / a_off["flops"]
+rec["u8_count_on"] = a_on["u8_coll_count"]
+rec["u8_count_off"] = a_off["u8_coll_count"]
+rec["u8_bytes_on"] = a_on["u8_coll_bytes"]
+rec["u8_bytes_off"] = a_off["u8_coll_bytes"]
+rec["wire_bytes"] = wire
+rec["x_max_abs_diff_4x2"] = max(
+    float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+    for a, b in zip(jax.tree.leaves(st_on["x"]),
+                    jax.tree.leaves(st_off["x"])))
+
+# mesh B (8 data x 1 model): zero-1 + batch sharding only slice the
+# batch/stack dims — no contraction is ever split, so bucketed == per-
+# leaf stays BIT-equal on the jnp path even under real 8-device SPMD.
+mesh1 = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+_, st_on1, _ = arm(mesh1, 8, True)
+_, st_off1, _ = arm(mesh1, 8, False)
+rec["bit_equal_8x1"] = all(jax.tree.leaves(jax.tree.map(
+    lambda a, b: bool(jnp.all(a == b)), st_on1["x"], st_off1["x"])))
+
+# shard_map around the fused Pallas iteration (interpret): the kernel
+# runs on local [B/shards, m, n] sub-batches and matches the oracle.
+g = jax.random.normal(jax.random.key(1), (8, 48, 80), jnp.float32) * 0.1
+got = jax.jit(lambda x: newton_schulz_batched(
+    x, steps=3, use_pallas=True, interpret=True, mesh=mesh,
+    pspec=P("data", None, "model")))(g)
+rec["shard_map_max_err"] = float(jnp.max(jnp.abs(
+    got - ref.newton_schulz_batched_ref(g, steps=3))))
+print(json.dumps(rec))
+"""
+
+
+def spmd_ab(timeout: int = 1800) -> dict:
+    """Run the 8-host-device bucketing A/B subprocess; returns the
+    record (per-device FLOPs both arms, ratio, wire invariants, 8x1
+    bit-equality, shard_map kernel error)."""
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    root = os.path.join(os.path.dirname(__file__), "..")
+    out = subprocess.run([sys.executable, "-c", SPMD_AB_SCRIPT],
+                         capture_output=True, text=True, cwd=root, env=env,
+                         timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"spmd_ab subprocess failed:\n{out.stderr[-3000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run_spmd_ab() -> list[dict]:
+    rec = spmd_ab()
+    row = {"bench": "ns", "arch": "granite-3-2b-reduced", "kind": "spmd_ab",
+           "mesh": "4x2+8x1 host", **rec}
+    assert rec["ns_flops_ratio"] <= NS_SPMD_RATIO_BOUND, rec
+    assert rec["u8_count_on"] == 1 and rec["u8_count_off"] == 1, rec
+    assert rec["u8_bytes_on"] == rec["u8_bytes_off"] == rec["wire_bytes"], rec
+    assert rec["bit_equal_8x1"], rec
+    assert rec["x_max_abs_diff_4x2"] < 1e-6, rec
+    assert rec["shard_map_max_err"] < 2e-3, rec
+    return [row]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_ns.json")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--spmd-ab", action="store_true",
+                    help="also run the 8-device bucketing-on/off FLOP "
+                         "ratio A/B (subprocess; the slow CI job's "
+                         "regression guard)")
     args = ap.parse_args()
     rows = run(fast=args.fast)
+    if args.spmd_ab:
+        rows += run_spmd_ab()
     for r in rows:
         print(json.dumps(r), flush=True)
     disp = next(r for r in rows if r["kind"] == "dispatch")

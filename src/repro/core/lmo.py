@@ -84,7 +84,8 @@ def lmo_direction(g: jax.Array, kind: str, *, ns_steps: int = 5,
 
 def lmo_direction_batched(g: jax.Array, kind: str = "spectral", *,
                           ns_steps: int = 5,
-                          use_pallas: str | bool = "auto") -> jax.Array:
+                          use_pallas: str | bool = "auto",
+                          mesh=None, pspec=None) -> jax.Array:
     """Batched Z* over a ``[B, m, n]`` canonical slice stack (m <= n,
     orientation fixed upstream by ``repro.dist.bucketing``).
 
@@ -92,12 +93,18 @@ def lmo_direction_batched(g: jax.Array, kind: str = "spectral", *,
     chain) warrants bucketed dispatch (DESIGN.md §7); every other kind is
     elementwise and fuses trivially. Bit-equal per slice to
     ``lmo_direction(slice, "spectral")`` on the jnp path.
+
+    ``mesh``/``pspec`` (the bucket's ``ns_bucket_pspec``) thread the
+    sharding constraint through the whole Newton-Schulz chain so the
+    batched dispatch runs sharded instead of replicated — a value
+    identity either way.
     """
     if kind != "spectral":
         raise ValueError(f"batched LMO supports 'spectral' only, got {kind}")
     if g.ndim != 3:
         raise ValueError("batched spectral LMO needs a [B, m, n] stack")
-    return -newton_schulz_batched(g, steps=ns_steps, use_pallas=use_pallas)
+    return -newton_schulz_batched(g, steps=ns_steps, use_pallas=use_pallas,
+                                  mesh=mesh, pspec=pspec)
 
 
 def sharp(g: jax.Array, kind: str, **kw) -> jax.Array:

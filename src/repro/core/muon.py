@@ -169,11 +169,19 @@ class EF21Muon:
     # function once per (metas, shapes) and let the caller jit it.
     def make_step(self, metas: Any,
                   reshard_payloads: Callable | None = None,
-                  donate: bool = False) -> Callable:
+                  donate: bool = False, mesh=None,
+                  fsdp: bool = False) -> Callable:
         """``reshard_payloads`` is the cross-worker communication hook
         (the trainer's worker-axis all-gather). None means single-process
         — there is no collective to fuse, so the wire pack/unpack is
-        skipped entirely (it is a values-identity either way)."""
+        skipped entirely (it is a values-identity either way).
+
+        ``mesh``/``fsdp`` make the bucketed phase-5 dispatch
+        sharding-aware: each NS bucket carries its ``ns_bucket_pspec``
+        and the batched chain is pinned to it (constraints on the jnp
+        path, ``shard_map`` around the fused kernel on the Pallas path)
+        instead of losing the per-leaf TP/zero-1 shardings at the bucket
+        concat. Single-process callers leave them unset."""
         cfg = self.cfg
         pack_wire = cfg.wire_pack and reshard_payloads is not None
         if reshard_payloads is None:
@@ -234,6 +242,18 @@ class EF21Muon:
                 lambda lp, pl: lp.w2s.decompress(
                     pl, lp.slice_shape, jnp.float32),
                 payloads, extra_vmap=1)
+            if cfg.ns_bucketing and isinstance(mesh, jax.sharding.Mesh):
+                # the server decompresses REPLICATED (§5: the payload
+                # buffer was just all-gathered to every device). Pin it,
+                # or the phase-5 bucket constraints propagate backward
+                # through decompress and the partitioner reshards the
+                # *compressed u8 payloads* instead — splitting the
+                # single fused payload all-gather the wire invariant
+                # (tests/test_sharding.py) pins.
+                rep = jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())
+                deltas = [jax.lax.with_sharding_constraint(d, rep)
+                          for d in deltas]
             gs_l = [(gs.astype(jnp.float32)
                      + jnp.mean(d, axis=0)).astype(gs.dtype)
                     for gs, d in zip(plan.flatten(state["g_server"]), deltas)]
@@ -253,7 +273,7 @@ class EF21Muon:
 
             x_flat = plan.flatten(state["x"])
             if cfg.ns_bucketing:
-                buckets = plan.ns_buckets()
+                buckets = plan.ns_buckets(mesh=mesh, fsdp=fsdp)
                 bucketed = {i for b in buckets for i in b.leaf_ids}
                 x_l = [
                     x if i in bucketed else
@@ -261,15 +281,15 @@ class EF21Muon:
                     for i, (lp, x, g) in enumerate(
                         zip(plan.leaves, x_flat, gs_l))]
                 for b in buckets:
-                    g_b = b.stack([gs_l[i] for i in b.leaf_ids])
+                    g_b = b.stack([gs_l[i] for i in b.leaf_ids], mesh=mesh)
                     d_b = lmo_direction_batched(
                         g_b, ns_steps=cfg.ns_steps,
-                        use_pallas=cfg.use_pallas)
+                        use_pallas=cfg.use_pallas, mesh=mesh, pspec=b.pspec)
                     x_b = b.stack([x_flat[i] for i in b.leaf_ids],
-                                  dtype=jnp.float32)
+                                  dtype=jnp.float32, mesh=mesh)
                     x_b = x_b + (b.radius_vector(t)[:, None, None]
                                  * d_b.astype(jnp.float32))
-                    for i, piece in zip(b.leaf_ids, b.unstack(x_b)):
+                    for i, piece in zip(b.leaf_ids, b.unstack(x_b, mesh=mesh)):
                         x_l[i] = piece.astype(x_flat[i].dtype)
             else:
                 x_l = plan.map_flat(lmo_leaf, x_flat, gs_l)

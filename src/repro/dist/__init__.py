@@ -1,13 +1,13 @@
 # Distribution layer: mesh partition rules + layer-wise optimizer plumbing.
 from .bucketing import NSBucket, build_buckets
 from .layerwise import LayerPlan, LeafPlan, resolve_compressor, vmap_n
-from .sharding import (batch_pspec, n_workers_for, param_pspec, param_pspecs,
-                       serve_pspecs, state_pspecs, to_shardings,
-                       worker_axis_for)
+from .sharding import (batch_pspec, n_workers_for, ns_bucket_pspec,
+                       param_pspec, param_pspecs, serve_pspecs, state_pspecs,
+                       to_shardings, worker_axis_for)
 
 __all__ = [
     "LayerPlan", "LeafPlan", "resolve_compressor", "vmap_n",
-    "NSBucket", "build_buckets",
+    "NSBucket", "build_buckets", "ns_bucket_pspec",
     "param_pspec", "param_pspecs", "state_pspecs", "batch_pspec",
     "serve_pspecs", "to_shardings", "worker_axis_for", "n_workers_for",
 ]

@@ -16,18 +16,30 @@ the step runs ONE batched NS dispatch chain per distinct slice shape:
     the whole stack rides one batched kernel grid;
   * per-bucket static metadata includes the per-slice LMO radius scales
     as a length-``batch`` vector, so the trust-region update is applied
-    batched too.
+    batched too;
+  * when built against a mesh, each bucket carries the static
+    ``ns_bucket_pspec`` for its ``[B, m, n]`` stack (batch dim over the
+    largest divisible slow axis, trailing ``model`` dim when the member
+    TP orientations agree) and ``stack``/``unstack`` pin it with
+    ``with_sharding_constraint`` — without this the bucket concat drops
+    the per-leaf TP/zero-1 shardings and the partitioner replicates the
+    whole NS chain (the +13.7% per-device FLOP regression this fixes).
 
 ``stack``/``unstack`` are exact inverses (transpose + reshape only, no
-arithmetic), so the bucketed step stays bit-equal to the per-leaf step on
-the jnp path — asserted in tests/test_ns_bucketing.py.
+arithmetic) and sharding constraints are value-identities, so the
+bucketed step stays bit-equal to the per-leaf step on the jnp path —
+asserted in tests/test_ns_bucketing.py.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.dist.sharding import ns_bucket_pspec, param_pspec
 
 
 @dataclass(frozen=True)
@@ -39,33 +51,55 @@ class NSBucket:
     transposes: tuple[bool, ...]       # per leaf: slice stored as [n, m]
     counts: tuple[int, ...]            # per leaf: n_stack slices contributed
     radius_scales: tuple[float, ...]   # per slice, len == batch
+    pspec: Any = None                  # PartitionSpec of the [B, m, n] stack
+                                       # (ns_bucket_pspec; None off-mesh)
 
     @property
     def batch(self) -> int:
         return sum(self.counts)
 
+    # ------------------------------------------------------------ sharding
+    def _constrain(self, x: jax.Array, mesh) -> jax.Array:
+        """Pin the stacked array to the bucket's PartitionSpec (needs a
+        live mesh for the NamedSharding; a no-op when the bucket was
+        built without one)."""
+        if self.pspec is None or not isinstance(mesh, jax.sharding.Mesh):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, self.pspec))
+
     # ------------------------------------------------------------ stacking
-    def stack(self, leaves: list[jax.Array], dtype=None) -> jax.Array:
+    def stack(self, leaves: list[jax.Array], dtype=None,
+              mesh=None) -> jax.Array:
         """Fold per-leaf arrays ``[*stack, s0, s1]`` into one canonical
         ``[batch, m, n]`` stack: reshape the stack dims into the batch dim,
         swap the trailing axes of transposed leaves, concatenate in
-        ``leaf_ids`` order. Transpose + reshape only — value-exact."""
+        ``leaf_ids`` order. Transpose + reshape only — value-exact. With a
+        mesh, the result is pinned to the bucket's ``pspec``."""
+        if dtype is None:
+            if len({x.dtype for x in leaves}) > 1:
+                offenders = ", ".join(
+                    f"leaf {lid}[{sh}]: {x.dtype}" for lid, sh, x in
+                    zip(self.leaf_ids, self.leaf_shapes, leaves))
+                raise TypeError(
+                    f"NSBucket.stack: mixed leaf dtypes in bucket "
+                    f"{self.shape} ({offenders}) — pass dtype= to unify")
         parts = []
         for x, tr in zip(leaves, self.transposes):
             x = x.reshape((-1,) + x.shape[x.ndim - 2:])
             if tr:
                 x = jnp.swapaxes(x, -1, -2)
             parts.append(x if dtype is None else x.astype(dtype))
-        if len({p.dtype for p in parts}) > 1:
-            raise TypeError(
-                f"NSBucket.stack: mixed leaf dtypes "
-                f"{[str(p.dtype) for p in parts]} — pass dtype= to unify")
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+        out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+        return self._constrain(out, mesh)
 
-    def unstack(self, batch: jax.Array) -> list[jax.Array]:
+    def unstack(self, batch: jax.Array, mesh=None) -> list[jax.Array]:
         """Exact inverse of ``stack`` (up to dtype, which the caller
         restores): split the batch dim back into per-leaf slabs, undo the
-        orientation swap, restore the stack dims."""
+        orientation swap, restore the stack dims. With a mesh, the
+        incoming stack is pinned to the bucket's ``pspec`` first so the
+        whole batched chain ends sharded."""
+        batch = self._constrain(batch, mesh)
         out, off = [], 0
         for full_shape, tr, cnt in zip(self.leaf_shapes, self.transposes,
                                        self.counts):
@@ -83,31 +117,81 @@ class NSBucket:
         return jnp.asarray(t, jnp.float32) * scales
 
 
-def build_buckets(plan) -> tuple[NSBucket, ...]:
+def build_buckets(plan, mesh=None, fsdp: bool = False) -> tuple[NSBucket, ...]:
     """Group the spectral 2-D leaves of a LayerPlan by canonical slice
-    shape. Deterministic: buckets sorted by shape, leaves in treedef
-    order within a bucket. Non-spectral leaves (and any spectral leaf
-    without a 2-D slice, which the per-leaf LMO would reject anyway) are
-    left to the per-leaf path."""
-    groups: dict[tuple[int, int], list] = {}
+    shape. Deterministic: buckets sorted by shape (then TP orientation),
+    leaves in treedef order within a bucket. Non-spectral leaves (and any
+    spectral leaf without a 2-D slice, which the per-leaf LMO would
+    reject anyway) are left to the per-leaf path.
+
+    With ``mesh`` (shape-only stand-ins work — only ``mesh.shape`` /
+    ``mesh.axis_names`` are read), each bucket additionally carries its
+    static ``ns_bucket_pspec``, derived from the member leaves'
+    ``param_pspec`` with the canonical transpose applied — and shape
+    groups are **sub-split by canonical TP orientation**: a transposed
+    up/down-projection pair puts its ``model`` axis on opposite canonical
+    dims, and no single stack layout can TP-shard both, so one merged
+    bucket would leave the (FLOP-dominant) pair replicated over the model
+    axis. Splitting keeps every sub-bucket's orientation consistent, the
+    trailing-dim rule fires, and each sub-stack runs model-sharded —
+    at the cost of one extra dispatch chain per mixed shape, which the
+    512-chip dry-run shows is FLOP-neutral noise next to the replication
+    it removes."""
+    model_n = mesh.shape.get("model", 1) if mesh is not None else 1
+    groups: dict[tuple, list] = {}
     for i, lp in enumerate(plan.leaves):
         if lp.meta.lmo != "spectral" or len(lp.slice_shape) != 2:
             continue
         s0, s1 = lp.slice_shape
         tr = s0 > s1
-        key = (s1, s0) if tr else (s0, s1)
-        groups.setdefault(key, []).append((i, lp, tr))
+        shape = (s1, s0) if tr else (s0, s1)
+        spec = mpos = None
+        smodel = False
+        if mesh is not None and model_n > 1:
+            full = tuple(param_pspec(lp.meta, lp.shape, mesh, fsdp=fsdp))
+            row, col = full[-2], full[-1]
+            if tr:
+                row, col = col, row
+            spec = (row, col)
+            mpos = 0 if row == "model" else (1 if col == "model" else None)
+            smodel = "model" in full[:-2]   # expert-parallel stack dim
+        groups.setdefault((shape, mpos), []).append((i, lp, tr, spec, smodel))
+    # fold no-TP members into the single TP-orientation group of their
+    # shape (ns_bucket_pspec ignores them when judging orientation, and
+    # one dispatch chain beats two) — unless they carry ``model`` on a
+    # stack dim (expert parallelism): the expert dim folds into the
+    # batch dim, where batch-axis model sharding beats trailing TP, so
+    # those keep their own bucket.
+    if model_n > 1:
+        for shape in {s for s, _ in groups}:
+            tp = [p for s, p in groups if s == shape and p is not None]
+            none_members = groups.get((shape, None))
+            if none_members and len(tp) == 1 \
+                    and not any(sm for *_, sm in none_members):
+                groups[(shape, tp[0])] = sorted(
+                    groups[(shape, tp[0])] + groups.pop((shape, None)))
     buckets = []
-    for key in sorted(groups):
+    for key in sorted(groups, key=lambda k: (k[0], -1 if k[1] is None
+                                             else k[1])):
+        shape, _ = key
         members = groups[key]
         scales = []
-        for _, lp, _ in members:
+        for _, lp, *_ in members:
             scales.extend([float(lp.meta.radius_scale)] * lp.n_stack)
+        pspec = None
+        if mesh is not None:
+            pspec = ns_bucket_pspec(
+                sum(lp.n_stack for _, lp, *_ in members), shape,
+                [spec for *_, spec, _ in members if spec is not None],
+                mesh, stack_model=any(sm for *_, sm in members))
+            if all(a is None for a in pspec):
+                pspec = None
         buckets.append(NSBucket(
-            shape=key,
-            leaf_ids=tuple(i for i, _, _ in members),
-            leaf_shapes=tuple(lp.shape for _, lp, _ in members),
-            transposes=tuple(tr for _, _, tr in members),
-            counts=tuple(lp.n_stack for _, lp, _ in members),
-            radius_scales=tuple(scales)))
+            shape=shape,
+            leaf_ids=tuple(i for i, *_ in members),
+            leaf_shapes=tuple(lp.shape for _, lp, *_ in members),
+            transposes=tuple(tr for _, _, tr, *_ in members),
+            counts=tuple(lp.n_stack for _, lp, *_ in members),
+            radius_scales=tuple(scales),
+            pspec=pspec))
     return tuple(buckets)

@@ -74,7 +74,7 @@ class LayerPlan:
         self.treedef = treedef
         self.leaves = leaves
         self._wire_layouts: dict = {}   # wire-dtype name -> WireLayout
-        self._ns_buckets: tuple | None = None
+        self._ns_buckets: dict = {}     # (mesh key, fsdp) -> tuple[NSBucket]
 
     @classmethod
     def build(cls, params: Any, metas: Any, w2s: str = "identity",
@@ -138,15 +138,20 @@ class LayerPlan:
                                    wire_dtype)
 
     # ------------------------------------------------------- NS bucketing
-    def ns_buckets(self) -> tuple:
+    def ns_buckets(self, mesh=None, fsdp: bool = False) -> tuple:
         """Shape buckets over the spectral leaves (DESIGN.md §7) — the
         static grouping behind the batched Newton-Schulz dispatch in
-        phase 5 of the optimizer. Built once per plan."""
+        phase 5 of the optimizer. With ``mesh`` each bucket also carries
+        its ``ns_bucket_pspec`` (the sharding of the stacked chain).
+        Built once per plan and (mesh shape, fsdp) combination."""
         from repro.dist.bucketing import build_buckets
 
-        if self._ns_buckets is None:
-            self._ns_buckets = build_buckets(self)
-        return self._ns_buckets
+        key = None if mesh is None else (
+            tuple(mesh.axis_names),
+            tuple(mesh.shape[a] for a in mesh.axis_names), fsdp)
+        if key not in self._ns_buckets:
+            self._ns_buckets[key] = build_buckets(self, mesh=mesh, fsdp=fsdp)
+        return self._ns_buckets[key]
 
     def wire_layout(self, wire_dtype):
         """The static WireLayout (repro.wire) for this plan: the offset

@@ -154,6 +154,69 @@ def state_pspecs(state: dict, params: Any, metas: Any, mesh,
     return out
 
 
+def ns_bucket_pspec(batch: int, shape: tuple[int, int],
+                    member_specs, mesh, stack_model: bool = False) -> P:
+    """PartitionSpec for one ``[batch, m, n]`` Newton-Schulz bucket stack
+    (DESIGN.md §7): the sharding the batched spectral LMO chain runs
+    under, so bucketing does not replicate compute the per-leaf path
+    sharded.
+
+    * the batch dim shards over the **largest divisible slow-axis
+      composition**: ``data``, ``pod``, or ``("pod", "data")`` on
+      multi-pod meshes — whichever has the most shards while dividing
+      ``batch`` (the stack folds layer/expert stacks into the batch dim,
+      so this subsumes the zero-1 layer-parallel rule and adds batch
+      parallelism the per-leaf path never had). With ``stack_model``
+      (some member carries its ``model`` axis on a *stack* dim —
+      expert parallelism, whose expert dim is folded into the batch dim)
+      the compositions may additionally include ``model``, provided the
+      trailing dims left it free: expert-parallel stacks keep their
+      model-axis parallelism as batch parallelism instead of being
+      pinned replicated over ``model``;
+    * the trailing dims carry ``model`` when **all** member leaves that
+      are TP-sharded agree on the canonical position of their ``model``
+      axis after the stacking transpose (``member_specs`` is the
+      per-member ``(row, col)`` slice spec in canonical orientation) and
+      that dim divides — a mixed up/down-projection bucket whose members
+      disagree stays unsharded on the trailing dims and relies on batch
+      parallelism alone.
+
+    Only ``mesh.shape`` / ``mesh.axis_names`` are read (shape-only mesh
+    stand-ins work). No mesh axis is ever assigned twice: the batch dim
+    draws from {pod, data} (plus ``model`` only when ``stack_model``
+    and the trailing dims don't use it), the trailing dims from
+    {model} only.
+    """
+    model_n = mesh.shape.get("model", 1)
+    row = col = None
+    if model_n > 1:
+        pos = {(0 if r == "model" else 1)
+               for r, c in member_specs if "model" in (r, c)}
+        if pos == {0} and shape[0] % model_n == 0:
+            row = "model"
+        elif pos == {1} and shape[1] % model_n == 0:
+            col = "model"
+
+    slow = [a for a in ("pod", "data")
+            if a in mesh.axis_names and mesh.shape.get(a, 1) > 1]
+    cands: list[tuple[str, ...]] = [(a,) for a in slow]
+    if len(slow) == 2:
+        cands.append(("pod", "data"))
+    if stack_model and model_n > 1 and row is None and col is None:
+        cands += [c + ("model",) for c in cands] + [("model",)]
+    lead: tuple[str, ...] | None = None
+    lead_n = 1
+    for c in cands:
+        n = 1
+        for a in c:
+            n *= mesh.shape[a]
+        if batch % n == 0 and n > lead_n:
+            lead, lead_n = c, n
+    if lead is not None and len(lead) == 1:
+        lead = lead[0]
+    return P(lead, row, col)
+
+
 def batch_pspec(batch: Any, mesh, kind: str) -> Any:
     """Input batch specs. Train batches carry ``[n_workers, per_worker,
     ...]`` leading dims: workers go on the worker axis, and on a
@@ -201,6 +264,13 @@ def serve_pspecs(cache: Any, batch: int, mesh, cache_alt: Any = None) -> Any:
         shape = x.shape
         axes: list[str | None] = [None] * len(shape)
         if alt is not None:
+            if len(alt.shape) != len(shape):
+                raise ValueError(
+                    f"serve_pspecs: cache/cache_alt leaf rank mismatch "
+                    f"({shape} vs {alt.shape}) — the batch dim is found "
+                    f"by elementwise shape diff, so both cache trees must "
+                    f"come from the same cache_spec at different batch "
+                    f"sizes")
             diff = [i for i, (s, t) in enumerate(zip(shape, alt.shape))
                     if s != t]
             b_i = diff[0] if diff else None

@@ -102,7 +102,8 @@ def newton_schulz_batched(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
                           eps: float = 1e-7,
                           use_pallas: str | bool = "auto", block: int = 128,
                           interpret: bool = False,
-                          fused: str | bool = "auto") -> jax.Array:
+                          fused: str | bool = "auto",
+                          mesh=None, pspec=None) -> jax.Array:
     """Orthogonalise a ``[B, m, n]`` stack of independent slices.
 
     The batched entry point behind shape bucketing (DESIGN.md §7): one
@@ -113,31 +114,74 @@ def newton_schulz_batched(g: jax.Array, steps: int = 5, coeffs=NS_COEFFS,
     ``block`` multiples (zero padding is exact, as in ``newton_schulz``)
     and falls back to a vmapped three-call chain when the [m, m] gram
     exceeds the fused kernel's VMEM budget (or ``fused=False``).
+
+    ``mesh``/``pspec`` make the chain sharding-aware (the
+    ``ns_bucket_pspec`` of the stack, threaded down from the bucketed
+    phase-5 dispatch): on the jnp path every iterate is pinned with
+    ``with_sharding_constraint`` so the partitioner batch/TP-shards the
+    chain instead of replicating it; on the Pallas path the fused kernel
+    runs under ``shard_map`` over the batch axes of ``pspec``, each
+    device dispatching its local ``[B/shards, m, n]`` sub-batch
+    (``fused_ns_feasible`` gated on the per-device sub-batch). Both are
+    value-identities — sharding never changes the math of a slice.
     """
     if g.ndim != 3:
         raise ValueError("newton_schulz_batched expects [B, m, n]")
     if use_pallas == "auto":
         use_pallas = _on_tpu()
     if not use_pallas:
+        hook = None
+        if mesh is not None and pspec is not None \
+                and isinstance(mesh, jax.sharding.Mesh):
+            sharding = jax.sharding.NamedSharding(mesh, pspec)
+            hook = lambda x: jax.lax.with_sharding_constraint(x, sharding)
         return ref.newton_schulz_batched_ref(g, steps=steps, coeffs=coeffs,
-                                             eps=eps)
-    nrm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32)),
-                           axis=(-2, -1), keepdims=True))
-    x = g / (nrm + eps).astype(g.dtype)
-    m, n = x.shape[1:]
-    pm, pn = (-m) % block, (-n) % block
-    if pm or pn:
-        x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)))
-    if fused == "auto":
-        fused = fused_ns_feasible(x.shape[1], block, x.dtype.itemsize)
-    for _ in range(steps):
-        if fused:
-            x = ns_iteration_fused(x, coeffs, block_m=block, block_n=block,
-                                   interpret=interpret)
-        else:
-            x = jax.vmap(lambda s: ns_iteration_pallas(
-                s, coeffs, block=block, interpret=interpret))(x)
-    return x[:, :m, :n]
+                                             eps=eps, hook=hook)
+
+    def chain(x):
+        # per-shard body: normalise per slice, pad to block multiples,
+        # run the iteration chain, slice back. Under shard_map x is the
+        # local [B/shards, m, n] sub-batch and the VMEM feasibility gate
+        # sees exactly what one device will dispatch.
+        nrm = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)),
+                               axis=(-2, -1), keepdims=True))
+        x = x / (nrm + eps).astype(x.dtype)
+        m, n = x.shape[1:]
+        pm, pn = (-m) % block, (-n) % block
+        if pm or pn:
+            x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)))
+        use_fused = fused
+        if use_fused == "auto":
+            use_fused = fused_ns_feasible(x.shape[1], block, x.dtype.itemsize)
+        for _ in range(steps):
+            if use_fused:
+                x = ns_iteration_fused(x, coeffs, block_m=block,
+                                       block_n=block, interpret=interpret)
+            else:
+                x = jax.vmap(lambda s: ns_iteration_pallas(
+                    s, coeffs, block=block, interpret=interpret))(x)
+        return x[:, :m, :n]
+
+    if mesh is not None and pspec is not None \
+            and isinstance(mesh, jax.sharding.Mesh) and len(pspec) \
+            and pspec[0] is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        lead = pspec[0]
+        axes = (lead,) if isinstance(lead, str) else tuple(lead)
+        shards = 1
+        for a in axes:
+            shards *= mesh.shape[a]
+        if shards > 1 and g.shape[0] % shards == 0:
+            # batch axes only: each shard needs its slices whole (the
+            # fused kernel grams over the full [m, n] slice locally), so
+            # any trailing model spec stays outside the shard_map — the
+            # kernel is batch-parallel, TP applies to the jnp path.
+            spec = P(lead, None, None)
+            return shard_map(chain, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec, check_rep=False)(g)
+    return chain(g)
 
 
 def natural_compress(x: jax.Array, use_pallas: str | bool = "auto",

@@ -65,20 +65,32 @@ def ns_iteration_batched_ref(x: jax.Array, coeffs=NS_COEFFS) -> jax.Array:
 
 def newton_schulz_batched_ref(g: jax.Array, steps: int = 5,
                               coeffs=NS_COEFFS,
-                              eps: float = 1e-7) -> jax.Array:
+                              eps: float = 1e-7,
+                              hook=None) -> jax.Array:
     """Batched orthogonalisation oracle over [B, m, n] slice stacks.
 
     No transpose handling: the bucketing layer (repro.dist.bucketing)
     canonicalises every slice to m <= n before stacking. Per-slice f32
     Frobenius normalisation matches ``newton_schulz_ref`` bit-for-bit.
+
+    ``hook``, when given, is a value-identity applied to the iterate
+    after normalisation and after every iteration — the sharding layer
+    (kernels/ops.py) threads ``with_sharding_constraint`` through the
+    chain with it, so the partitioner keeps the stack sharded instead of
+    replicating the whole chain. ``hook=None`` leaves the oracle
+    untouched.
     """
     if g.ndim != 3:
         raise ValueError("newton_schulz_batched_ref expects [B, m, n]")
     nrm = jnp.sqrt(jnp.sum(jnp.square(g.astype(jnp.float32)),
                            axis=(-2, -1), keepdims=True))
     x = g / (nrm + eps).astype(g.dtype)
+    if hook is not None:
+        x = hook(x)
     for _ in range(steps):
         x = ns_iteration_batched_ref(x, coeffs)
+        if hook is not None:
+            x = hook(x)
     return x
 
 

@@ -1,3 +1,4 @@
 # Launch layer: production mesh, multi-pod dry-run, train/serve CLIs.
 # Import modules directly (repro.launch.mesh / .dryrun / .train / .serve);
-# dryrun must be the FIRST import in its process (it sets XLA_FLAGS).
+# importing dryrun is side-effect free — its main() sets XLA_FLAGS
+# (appending to any existing value) before the first device query.

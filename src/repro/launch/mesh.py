@@ -5,9 +5,9 @@
 
 Functions, not module-level constants, so importing this module never
 touches jax device state. The dry-run process must set
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import (see dryrun.py); real launches get the mesh from the slice
-topology.
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
+initialises its backend (dryrun.py's ``ensure_host_devices`` appends it
+in ``main()``); real launches get the mesh from the slice topology.
 
 Partition logic lives in ``repro.dist``; ``n_workers_for`` is re-exported
 here for backwards compatibility with pre-dist callers.

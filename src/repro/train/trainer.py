@@ -125,7 +125,11 @@ class Trainer:
         else:
             reshard = None   # single-process: no collective, no wire pack
 
-        opt_step = self.opt.make_step(self.metas, reshard_payloads=reshard)
+        # mesh/fsdp make the bucketed NS dispatch sharding-aware (the
+        # bucket stacks carry their ns_bucket_pspec instead of dropping
+        # the per-leaf TP/zero-1 shardings at the concat)
+        opt_step = self.opt.make_step(self.metas, reshard_payloads=reshard,
+                                      mesh=self.mesh, fsdp=self.tcfg.fsdp)
 
         def step(state, batch, t):
             return opt_step(state, self._grad_and_loss, batch, t)

@@ -13,10 +13,12 @@ import textwrap
 import jax
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.muon import ParamMeta
-from repro.dist.sharding import batch_pspec, param_pspec, serve_pspecs
+from repro.dist.sharding import (batch_pspec, ns_bucket_pspec, param_pspec,
+                                 serve_pspecs)
 
 
 class FakeMesh:
@@ -80,6 +82,109 @@ def test_serve_pspecs_shards_batch_and_seq():
     spec = serve_pspecs(cache, 128, MESH)["k"]
     assert spec[1] == "data"       # batch dim
     assert "model" in spec         # sequence dim sharded
+
+
+# ------------------------------------------------- ns_bucket_pspec rule
+
+def test_ns_bucket_pspec_basics():
+    # consistent TP (col) + batch divisible by the composed slow axes
+    spec = ns_bucket_pspec(160, (2048, 2048), [(None, "model")] * 4, MESH3)
+    assert spec == P(("pod", "data"), None, "model")
+    # mixed up/down orientation: trailing dims stay unsharded
+    spec = ns_bucket_pspec(80, (2048, 8192),
+                           [(None, "model"), ("model", None)], MESH3)
+    assert spec == P("data", None, None)
+    # batch only divisible by pod
+    spec = ns_bucket_pspec(40, (2048, 8192), [(None, "model")], MESH3)
+    assert spec == P("pod", None, "model")
+    # nothing divides, no TP: fully unsharded
+    spec = ns_bucket_pspec(7, (48, 80), [(None, None)], MESH)
+    assert spec == P(None, None, None)
+    # members without TP don't veto the consistent ones
+    spec = ns_bucket_pspec(32, (64, 2048),
+                           [(None, "model"), (None, None)], MESH)
+    assert spec == P("data", None, "model")
+    # expert-parallel stacks (model on a stack dim, folded into the
+    # batch dim): model composes into the batch sharding when the
+    # trailing dims leave it free and the batch divides
+    spec = ns_bucket_pspec(4096, (2048, 7168), [(None, None)], MESH3,
+                           stack_model=True)
+    assert spec == P(("pod", "data", "model"), None, None)
+    # ... but never fights a trailing model assignment
+    spec = ns_bucket_pspec(4096, (2048, 7168), [(None, "model")], MESH3,
+                           stack_model=True)
+    assert spec == P(("pod", "data"), None, "model")
+    # and falls back through the slow-axis compositions when indivisible
+    spec = ns_bucket_pspec(48, (2048, 7168), [(None, None)], MESH3,
+                           stack_model=True)
+    assert spec == P("data", None, None)
+
+
+@given(data_n=st.integers(1, 8), model_n=st.integers(1, 8),
+       pod_n=st.integers(1, 4), batch=st.integers(1, 96),
+       m=st.sampled_from([8, 48, 64, 96]), n=st.sampled_from([64, 96, 256]),
+       members=st.lists(st.sampled_from(
+           [(None, "model"), ("model", None), (None, None),
+            ("data", "model"), (None, "data")]), min_size=1, max_size=5))
+@settings(max_examples=80, deadline=None)
+def test_ns_bucket_pspec_property(data_n, model_n, pod_n, batch, m, n,
+                                  members):
+    """Mesh-shape x bucket-shape sweep: no mesh axis is ever assigned
+    twice, the batch dim only shards when divisible (by the largest
+    divisible slow-axis composition), and the trailing model dim only
+    fires on a consistent member TP orientation with a divisible dim."""
+    axes = {}
+    if pod_n > 1:
+        axes["pod"] = pod_n
+    axes["data"] = data_n
+    axes["model"] = model_n
+    mesh = FakeMesh(**axes)
+    if m > n:
+        m, n = n, m
+    spec = ns_bucket_pspec(batch, (m, n), members, mesh)
+    assert len(spec) == 3
+    flat = [a for e in spec if e is not None
+            for a in ((e,) if isinstance(e, str) else tuple(e))]
+    assert len(flat) == len(set(flat)), spec          # no double assignment
+    lead, row, col = spec
+    # batch dim: slow axes only, divisible, and maximal among candidates
+    cands = [c for c in [("data",), ("pod",), ("pod", "data")]
+             if all(a in mesh.axis_names and mesh.shape[a] > 1 for a in c)]
+    div = [int(np.prod([mesh.shape[a] for a in c])) for c in cands
+           if batch % int(np.prod([mesh.shape[a] for a in c])) == 0]
+    if lead is None:
+        assert not div
+    else:
+        lead_t = (lead,) if isinstance(lead, str) else tuple(lead)
+        assert set(lead_t) <= {"pod", "data"}
+        size = int(np.prod([mesh.shape[a] for a in lead_t]))
+        assert batch % size == 0 and size == max(div)
+    # trailing dims: model only, divisible, consistent orientation
+    assert row in (None, "model") and col in (None, "model")
+    pos = {(0 if r == "model" else 1)
+           for r, c in members if "model" in (r, c)}
+    if row == "model":
+        assert pos == {0} and m % model_n == 0 and model_n > 1
+    if col == "model":
+        assert pos == {1} and n % model_n == 0 and model_n > 1
+    if model_n > 1 and len(pos) == 1:
+        p, d = next(iter(pos)), (m, n)[next(iter(pos))]
+        if d % model_n == 0:
+            assert (row, col)[p] == "model"
+
+
+class S3:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_serve_pspecs_rank_mismatch_raises():
+    """cache/cache_alt leaves of different rank used to silently zip-
+    truncate and could mis-identify the batch dim — now a clear error."""
+    cache = {"k": S3((4, 8, 16))}
+    alt = {"k": S3((4, 8, 16, 1))}
+    with pytest.raises(ValueError, match="rank mismatch"):
+        serve_pspecs(cache, 8, MESH, cache_alt=alt)
 
 
 SPMD_SCRIPT = r"""
