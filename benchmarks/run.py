@@ -10,8 +10,8 @@ import json
 import sys
 import time
 
-BENCHES = ("table2", "wire", "ns", "ef_necessity", "convergence", "kernels",
-           "fig1", "roofline")
+BENCHES = ("table2", "wire", "ns", "step", "ef_necessity", "convergence",
+           "kernels", "fig1", "roofline")
 
 
 def main() -> None:
@@ -23,9 +23,9 @@ def main() -> None:
 
     from benchmarks import (convergence, ef_necessity, fig1_compression,
                             kernel_bench, ns_bench, roofline_report,
-                            table2_bytes, wire_bytes)
+                            step_bench, table2_bytes, wire_bytes)
     mods = {"table2": table2_bytes, "wire": wire_bytes, "ns": ns_bench,
-            "ef_necessity": ef_necessity,
+            "step": step_bench, "ef_necessity": ef_necessity,
             "convergence": convergence, "kernels": kernel_bench,
             "fig1": fig1_compression, "roofline": roofline_report}
     names = [args.only] if args.only else list(BENCHES)

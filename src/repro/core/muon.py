@@ -78,6 +78,10 @@ class EF21MuonConfig:
     state_dtype: Any = jnp.float32
     wire_pack: bool = True         # fuse payloads into one uint8 wire buffer
     ns_bucketing: bool = True      # batch spectral LMOs by shape bucket (§7)
+    wire_stages: Any = "auto"      # staged wire pipeline (§8): "auto" = one
+                                   # stage per NS bucket + the eager chunk;
+                                   # 1 = the monolithic single-gather path
+                                   # (bit-identical A/B arm); N caps stages
 
 
 def _unzip(pairs: list, n: int) -> tuple[list, ...]:
@@ -91,13 +95,16 @@ class EF21Muon:
 
     # ------------------------------------------------------------------ plan
     def plan(self, params: Any, metas: Any) -> LayerPlan:
-        """The LayerPlan for this (treedef, metas, shapes) — cached LRU
-        (bounded at 8 entries, oldest dropped first), so init, every
-        traced step and the wire accounting share one plan, and shape
-        sweeps don't rebuild every live plan on eviction."""
+        """The LayerPlan for this (treedef, shapes, dtypes, metas) —
+        cached LRU (bounded at 8 entries, oldest dropped first), so init,
+        every traced step and the wire accounting share one plan, and
+        shape sweeps don't rebuild every live plan on eviction. Leaf
+        dtypes are part of the key: switching param dtype must not reuse
+        a stale plan (and its memoised wire layouts/buckets)."""
         leaves, treedef = jax.tree.flatten(params)
         metas_l = tuple(treedef.flatten_up_to(metas))
-        key = (treedef, tuple(tuple(p.shape) for p in leaves), metas_l)
+        key = (treedef, tuple(tuple(p.shape) for p in leaves),
+               tuple(jnp.dtype(p.dtype).name for p in leaves), metas_l)
         if key in self._plans:
             self._plans.move_to_end(key)
         else:
@@ -228,42 +235,30 @@ class EF21Muon:
                 plan.flatten(state["g_w"]),
                 plan.flatten(m_new), extra_vmap=1), 3)
 
-            # ---- 4. "server" receives payloads: pack the whole message
-            # into one contiguous uint8 buffer (repro.wire), gather it
-            # across the worker axis (trainer supplies the resharding
-            # hook == ONE fused all-gather of exactly the accounted
-            # bytes), unpack bit-exactly, decompress, average.
-            if pack_wire:
-                wire = plan.wire_layout(cfg.wire_dtype)
-                payloads = wire.unpack(reshard_payloads(wire.pack(payloads)))
-            else:
-                payloads = reshard_payloads(payloads)
-            deltas = plan.map_flat(
-                lambda lp, pl: lp.w2s.decompress(
-                    pl, lp.slice_shape, jnp.float32),
-                payloads, extra_vmap=1)
+            # ---- 4.+5. server receive + layer-wise LMO. Shared per-leaf
+            # pieces first: decompress one leaf's gathered payloads, pin
+            # the decompressed deltas replicated (§5: the payload buffer
+            # was just all-gathered to every device — without the pin the
+            # phase-5 bucket constraints propagate backward through
+            # decompress and the partitioner reshards the *compressed u8
+            # payloads*, splitting the fused payload all-gathers the wire
+            # invariant in tests/test_sharding.py pins), fold the worker
+            # mean into g_server, and the per-leaf / per-bucket LMOs.
+            rep = None
             if cfg.ns_bucketing and isinstance(mesh, jax.sharding.Mesh):
-                # the server decompresses REPLICATED (§5: the payload
-                # buffer was just all-gathered to every device). Pin it,
-                # or the phase-5 bucket constraints propagate backward
-                # through decompress and the partitioner reshards the
-                # *compressed u8 payloads* instead — splitting the
-                # single fused payload all-gather the wire invariant
-                # (tests/test_sharding.py) pins.
                 rep = jax.sharding.NamedSharding(
                     mesh, jax.sharding.PartitionSpec())
-                deltas = [jax.lax.with_sharding_constraint(d, rep)
-                          for d in deltas]
-            gs_l = [(gs.astype(jnp.float32)
-                     + jnp.mean(d, axis=0)).astype(gs.dtype)
-                    for gs, d in zip(plan.flatten(state["g_server"]), deltas)]
 
-            # ---- 5. layer-wise LMO step on the server iterate. With
-            # ns_bucketing the spectral leaves are grouped by canonical
-            # slice shape (DESIGN.md §7): one batched Newton-Schulz chain
-            # per bucket instead of one per leaf, stacks folded into the
-            # batch dim, the trust-region radii applied as a [B] vector.
-            # Bit-equal to the per-leaf path on the jnp reference path.
+            def recv_leaf(i, pl, gs):
+                lp = plan.leaves[i]
+                d = vmap_n(lambda s: lp.w2s.decompress(
+                    s, lp.slice_shape, jnp.float32),
+                    lp.meta.stack_dims + 1)(pl)
+                if rep is not None:
+                    d = jax.lax.with_sharding_constraint(d, rep)
+                return (gs.astype(jnp.float32)
+                        + jnp.mean(d, axis=0)).astype(gs.dtype)
+
             def lmo_leaf(lp, x, g):
                 d = lmo_direction(g, lp.meta.lmo, ns_steps=cfg.ns_steps,
                                   use_pallas=cfg.use_pallas)
@@ -271,28 +266,90 @@ class EF21Muon:
                 return (x.astype(jnp.float32)
                         + radius * d.astype(jnp.float32)).astype(x.dtype)
 
+            def lmo_bucket(b, gs_l, x_flat, x_l):
+                g_b = b.stack([gs_l[i] for i in b.leaf_ids], mesh=mesh)
+                d_b = lmo_direction_batched(
+                    g_b, ns_steps=cfg.ns_steps,
+                    use_pallas=cfg.use_pallas, mesh=mesh, pspec=b.pspec)
+                x_b = b.stack([x_flat[i] for i in b.leaf_ids],
+                              dtype=jnp.float32, mesh=mesh)
+                x_b = x_b + (b.radius_vector(t)[:, None, None]
+                             * d_b.astype(jnp.float32))
+                for i, piece in zip(b.leaf_ids, b.unstack(x_b, mesh=mesh)):
+                    x_l[i] = piece.astype(x_flat[i].dtype)
+
+            buckets = (plan.ns_buckets(mesh=mesh, fsdp=fsdp)
+                       if cfg.ns_bucketing else ())
+            bucketed = {i for b in buckets for i in b.leaf_ids}
+            splan = None
+            if pack_wire and cfg.ns_bucketing and cfg.wire_stages != 1:
+                sp = plan.stage_plan(mesh=mesh, fsdp=fsdp,
+                                     wire_stages=cfg.wire_stages,
+                                     ns_steps=cfg.ns_steps)
+                if sp.n_stages > 1:
+                    splan = sp
+
+            gsrv_l = plan.flatten(state["g_server"])
             x_flat = plan.flatten(state["x"])
-            if cfg.ns_bucketing:
-                buckets = plan.ns_buckets(mesh=mesh, fsdp=fsdp)
-                bucketed = {i for b in buckets for i in b.leaf_ids}
-                x_l = [
-                    x if i in bucketed else
-                    vmap_n(partial(lmo_leaf, lp), lp.meta.stack_dims)(x, g)
-                    for i, (lp, x, g) in enumerate(
-                        zip(plan.leaves, x_flat, gs_l))]
-                for b in buckets:
-                    g_b = b.stack([gs_l[i] for i in b.leaf_ids], mesh=mesh)
-                    d_b = lmo_direction_batched(
-                        g_b, ns_steps=cfg.ns_steps,
-                        use_pallas=cfg.use_pallas, mesh=mesh, pspec=b.pspec)
-                    x_b = b.stack([x_flat[i] for i in b.leaf_ids],
-                                  dtype=jnp.float32, mesh=mesh)
-                    x_b = x_b + (b.radius_vector(t)[:, None, None]
-                                 * d_b.astype(jnp.float32))
-                    for i, piece in zip(b.leaf_ids, b.unstack(x_b, mesh=mesh)):
-                        x_l[i] = piece.astype(x_flat[i].dtype)
+            if splan is not None:
+                # ---- staged wire pipeline (DESIGN.md §8): the §6 buffer
+                # repartitioned into K stage sub-buffers aligned with the
+                # NS buckets that consume them. All K gathers are issued
+                # up front — K independent all-gather start/done pairs
+                # for the latency-hiding scheduler — then each stage's
+                # unpack -> decompress -> g_server fold -> batched LMO
+                # consumes only its own sub-buffer, so the long NS chains
+                # of the early (biggest-FLOP) stages overlap the still-
+                # in-flight gathers of the later ones. Value-bit-equal to
+                # the monolithic path: staging is a pure repartition.
+                swire = plan.staged_wire_layout(cfg.wire_dtype, splan)
+                bufs = [reshard_payloads(swire.pack_stage(k, payloads))
+                        for k in range(splan.n_stages)]
+                gs_l: list = [None] * len(plan.leaves)
+                x_l: list = [None] * len(plan.leaves)
+                for k, stage in enumerate(splan.stages):
+                    for i, pl in zip(stage.leaf_ids,
+                                     swire.unpack_stage(k, bufs[k])):
+                        gs_l[i] = recv_leaf(i, pl, gsrv_l[i])
+                    for bi in stage.bucket_ids:
+                        lmo_bucket(buckets[bi], gs_l, x_flat, x_l)
+                    for i in stage.leaf_ids:
+                        if i not in bucketed:   # stage-0 eager leaves
+                            lp = plan.leaves[i]
+                            x_l[i] = vmap_n(partial(lmo_leaf, lp),
+                                            lp.meta.stack_dims)(
+                                                x_flat[i], gs_l[i])
             else:
-                x_l = plan.map_flat(lmo_leaf, x_flat, gs_l)
+                # ---- monolithic phase 4: pack the whole message into
+                # one contiguous uint8 buffer (repro.wire), gather it
+                # across the worker axis (trainer hook == ONE fused
+                # all-gather of exactly the accounted bytes), unpack
+                # bit-exactly, decompress, average.
+                if pack_wire:
+                    wire = plan.wire_layout(cfg.wire_dtype)
+                    payloads = wire.unpack(
+                        reshard_payloads(wire.pack(payloads)))
+                else:
+                    payloads = reshard_payloads(payloads)
+                gs_l = [recv_leaf(i, pl, gs) for i, (pl, gs)
+                        in enumerate(zip(payloads, gsrv_l))]
+
+                # ---- monolithic phase 5: layer-wise LMO on the server
+                # iterate. With ns_bucketing the spectral leaves run one
+                # batched Newton-Schulz chain per shape bucket (§7),
+                # stacks folded into the batch dim, radii as a [B]
+                # vector — bit-equal to the per-leaf path on jnp.
+                if cfg.ns_bucketing:
+                    x_l = [
+                        x if i in bucketed else
+                        vmap_n(partial(lmo_leaf, lp),
+                               lp.meta.stack_dims)(x, g)
+                        for i, (lp, x, g) in enumerate(
+                            zip(plan.leaves, x_flat, gs_l))]
+                    for b in buckets:
+                        lmo_bucket(b, gs_l, x_flat, x_l)
+                else:
+                    x_l = plan.map_flat(lmo_leaf, x_flat, gs_l)
 
             new_state = {
                 "step": state["step"] + 1,

@@ -1,6 +1,7 @@
 # Distribution layer: mesh partition rules + layer-wise optimizer plumbing.
 from .bucketing import NSBucket, build_buckets
 from .layerwise import LayerPlan, LeafPlan, resolve_compressor, vmap_n
+from .pipeline import StagePlan, WireStage, bucket_ns_flops, build_stage_plan
 from .sharding import (batch_pspec, n_workers_for, ns_bucket_pspec,
                        param_pspec, param_pspecs, serve_pspecs, state_pspecs,
                        to_shardings, worker_axis_for)
@@ -8,6 +9,7 @@ from .sharding import (batch_pspec, n_workers_for, ns_bucket_pspec,
 __all__ = [
     "LayerPlan", "LeafPlan", "resolve_compressor", "vmap_n",
     "NSBucket", "build_buckets", "ns_bucket_pspec",
+    "StagePlan", "WireStage", "bucket_ns_flops", "build_stage_plan",
     "param_pspec", "param_pspecs", "state_pspecs", "batch_pspec",
     "serve_pspecs", "to_shardings", "worker_axis_for", "n_workers_for",
 ]

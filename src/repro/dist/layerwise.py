@@ -75,6 +75,8 @@ class LayerPlan:
         self.leaves = leaves
         self._wire_layouts: dict = {}   # wire-dtype name -> WireLayout
         self._ns_buckets: dict = {}     # (mesh key, fsdp) -> tuple[NSBucket]
+        self._stage_plans: dict = {}    # (mesh key, fsdp, stages) -> StagePlan
+        self._staged_layouts: dict = {}  # (dtype, stage ids) -> StagedWireLayout
 
     @classmethod
     def build(cls, params: Any, metas: Any, w2s: str = "identity",
@@ -152,6 +154,38 @@ class LayerPlan:
         if key not in self._ns_buckets:
             self._ns_buckets[key] = build_buckets(self, mesh=mesh, fsdp=fsdp)
         return self._ns_buckets[key]
+
+    # ------------------------------------------------------- wire staging
+    def stage_plan(self, mesh=None, fsdp: bool = False, wire_stages="auto",
+                   ns_steps: int = 5):
+        """The staged-wire-pipeline partition of this plan's leaves
+        (DESIGN.md §8): stage 0 carries the per-leaf-path (eager) leaves,
+        then one stage per NS bucket descending by NS FLOPs, capped at
+        ``wire_stages`` by merging the smallest tail. Built once per
+        (mesh shape, fsdp, wire_stages)."""
+        from repro.dist.pipeline import build_stage_plan
+
+        mesh_key = None if mesh is None else (
+            tuple(mesh.axis_names),
+            tuple(mesh.shape[a] for a in mesh.axis_names))
+        key = (mesh_key, fsdp, wire_stages, ns_steps)
+        if key not in self._stage_plans:
+            self._stage_plans[key] = build_stage_plan(
+                self, self.ns_buckets(mesh=mesh, fsdp=fsdp),
+                wire_stages=wire_stages, ns_steps=ns_steps)
+        return self._stage_plans[key]
+
+    def staged_wire_layout(self, wire_dtype, stage_plan):
+        """The ``StagedWireLayout`` repartitioning ``wire_layout`` along
+        ``stage_plan`` — memoised per (wire dtype, stage partition)."""
+        from repro.wire.layout import build_staged_layout
+
+        ids = tuple(s.leaf_ids for s in stage_plan.stages)
+        key = (jnp.dtype(wire_dtype).name, ids)
+        if key not in self._staged_layouts:
+            self._staged_layouts[key] = build_staged_layout(
+                self.wire_layout(wire_dtype), ids)
+        return self._staged_layouts[key]
 
     def wire_layout(self, wire_dtype):
         """The static WireLayout (repro.wire) for this plan: the offset

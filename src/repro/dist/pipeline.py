@@ -1,0 +1,106 @@
+"""Stage assignment for the staged wire pipeline (DESIGN.md §8).
+
+The monolithic wire buffer (§6) serialises ONE payload all-gather ahead
+of all phase-5 LMO compute, so none of the gather latency is hidden —
+even though the batched Newton-Schulz chains (§7) are exactly the
+long-running, communication-free compute that could hide it. This module
+partitions the plan's leaves into K *wire stages* aligned with the NS
+buckets that consume them:
+
+  * stage 0 is the **eager** chunk: every leaf the per-leaf phase-5 path
+    handles (non-spectral leaves, spectral leaves without a 2-D slice) —
+    cheap sign/vector LMOs consumed first;
+  * every NS bucket gets a stage, ordered **descending by NS FLOPs**:
+    the biggest batched chains run first, so their compute hides the
+    still-in-flight gathers of the later stages (all K gathers are
+    issued up front by the optimizer — see ``core/muon.py`` phase 4);
+  * ``wire_stages=N`` caps the stage count: the smallest-FLOP buckets
+    merge into the last stage (N == 1 collapses to the monolithic path,
+    the bit-identical A/B arm; ``"auto"`` keeps one stage per bucket).
+
+A stage is a pure *repartition* of the §6 buffer: the per-stage
+sub-buffers of ``wire.layout.StagedWireLayout`` sum byte-for-byte to
+``WireLayout.total_nbytes`` and every leaf keeps its codec byte-layout,
+so pack -> unpack stays bit-exact per stage and the staged step is
+value-bit-equal to the monolithic one on the jnp path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+def bucket_ns_flops(bucket, ns_steps: int = 5) -> float:
+    """Static FLOP estimate of one bucket's batched Newton-Schulz chain:
+    per slice and iteration, the gram ``X Xᵀ`` (2·m²·n), the quintic
+    polynomial ``A²`` (2·m³) and the update ``poly @ X`` (2·m²·n). Only
+    used to *order* stages, so the constant factor is irrelevant."""
+    m, n = bucket.shape
+    return float(ns_steps) * bucket.batch * (4.0 * m * m * n + 2.0 * m ** 3)
+
+
+@dataclass(frozen=True)
+class WireStage:
+    """One stage of the pipeline: which plan leaves ride its sub-buffer
+    and which NS buckets its unpack feeds."""
+    leaf_ids: tuple[int, ...]      # plan-leaf ids, treedef order
+    bucket_ids: tuple[int, ...]    # indices into plan.ns_buckets(...)
+    ns_flops: float                # static NS FLOPs this stage runs
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    """Leaf -> stage partition of a LayerPlan (built once per plan and
+    (mesh shape, fsdp, wire_stages) via ``LayerPlan.stage_plan``)."""
+    stages: tuple[WireStage, ...]
+    eager_leaf_ids: tuple[int, ...]   # stage-0 per-leaf-path leaves
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    def leaf_to_stage(self) -> dict[int, int]:
+        return {i: k for k, s in enumerate(self.stages) for i in s.leaf_ids}
+
+
+def build_stage_plan(plan, buckets, wire_stages="auto",
+                     ns_steps: int = 5) -> StagePlan:
+    """Partition ``plan``'s leaves into wire stages along the NS buckets.
+
+    ``buckets`` is ``plan.ns_buckets(mesh, fsdp)`` — each bucket's leaves
+    land in exactly one stage, so the batched LMO of a stage consumes
+    only its own sub-buffer. ``wire_stages``: ``"auto"`` = one stage per
+    bucket plus the eager chunk; an int ``N >= 1`` caps the count by
+    merging the smallest-FLOP bucket stages into the last one (``N`` can
+    never split a bucket, so the effective count is ``min(N, auto)``).
+
+    Deterministic: bucket stages descend by ``bucket_ns_flops`` (ties
+    break on bucket index); the union of stage ``leaf_ids`` is exactly
+    ``range(len(plan.leaves))`` with no leaf assigned twice.
+    """
+    if wire_stages != "auto":
+        wire_stages = int(wire_stages)
+        if wire_stages < 1:
+            raise ValueError(f"wire_stages must be >= 1, got {wire_stages}")
+    bucketed = {i for b in buckets for i in b.leaf_ids}
+    eager = tuple(i for i in range(len(plan.leaves)) if i not in bucketed)
+    order = sorted(range(len(buckets)),
+                   key=lambda bi: (-bucket_ns_flops(buckets[bi], ns_steps),
+                                   bi))
+    stages: list[WireStage] = []
+    if eager:
+        stages.append(WireStage(leaf_ids=eager, bucket_ids=(), ns_flops=0.0))
+    for bi in order:
+        b = buckets[bi]
+        stages.append(WireStage(leaf_ids=tuple(sorted(b.leaf_ids)),
+                                bucket_ids=(bi,),
+                                ns_flops=bucket_ns_flops(b, ns_steps)))
+    if wire_stages != "auto" and len(stages) > wire_stages:
+        # merge the smallest-FLOP tail (bucket stages are already sorted
+        # descending; the eager stage, if present, stays stage 0)
+        head, tail = stages[:wire_stages - 1], stages[wire_stages - 1:]
+        merged = WireStage(
+            leaf_ids=tuple(sorted(i for s in tail for i in s.leaf_ids)),
+            bucket_ids=tuple(bi for s in tail for bi in s.bucket_ids),
+            ns_flops=sum(s.ns_flops for s in tail))
+        stages = head + [merged]
+    return StagePlan(stages=tuple(stages), eager_leaf_ids=eager)

@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.dist import (batch_pspec, n_workers_for, param_pspecs,
                         serve_pspecs, to_shardings)
-from repro.launch.hlo_analysis import roofline_terms
+from repro.launch.hlo_analysis import overlap_roofline_terms
 from repro.launch.hlo_cost import analyze, cost_analysis_dict
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import abstract_params as _abstract_params
@@ -98,7 +98,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                fsdp: bool | None = None, beta: float = 0.1,
                s2w: str = "identity", pad_heads: int | None = None,
                zero1_lmo: bool = False, wire_pack: bool = True,
-               ns_bucketing: bool = True):
+               ns_bucketing: bool = True, wire_stages="auto"):
     """Lower + compile one (arch, shape, mesh). Returns the record dict."""
     import dataclasses
     cfg = get_config(arch)
@@ -130,7 +130,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         tr = Trainer(model, TrainerConfig(
             n_workers=n_w, beta=beta, w2s=w2s, s2w=s2w, fsdp=use_fsdp,
             use_pallas=False, zero1_lmo=zero1_lmo,
-            wire_pack=wire_pack, ns_bucketing=ns_bucketing), mesh=mesh)
+            wire_pack=wire_pack, ns_bucketing=ns_bucketing,
+            wire_stages=wire_stages), mesh=mesh)
         # wire accounting: analytic Table-2 bytes vs the exact bytes the
         # fused payload buffer moves (compare with the measured
         # u8_coll_bytes parsed from the compiled HLO below; that
@@ -146,7 +147,15 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                    # actually dispatches (TP-orientation sub-splits
                    # included), not the mesh-less grouping
                    ns_buckets=len(plan.ns_buckets(mesh=mesh,
-                                                  fsdp=use_fsdp)))
+                                                  fsdp=use_fsdp)),
+                   wire_stages=wire_stages,
+                   # effective pipeline stage count (§8); 1 when the
+                   # staged path collapses to the monolithic gather
+                   n_wire_stages=(plan.stage_plan(
+                       mesh=mesh, fsdp=use_fsdp,
+                       wire_stages=wire_stages).n_stages
+                       if wire_pack and ns_bucketing and wire_stages != 1
+                       else 1))
         batch = input_specs(cfg, shape, n_workers=n_w)
         state = tr.state_shapes()
         jitted = tr.jit_step(batch)
@@ -188,8 +197,19 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     except Exception as e:  # CPU backend may not implement it
         mem = {"error": str(e)[:200]}
     mflops = _model_flops(cfg, shape, total, active)
-    terms = roofline_terms(flops, bytes_acc, cost["coll_bytes"])
+    # overlap-aware roofline (§8): collective bottleneck term computed
+    # from per-pair exposed time, not the serialise-everything sum
+    terms = overlap_roofline_terms(flops, bytes_acc, cost["coll_bytes"],
+                                   cost["coll_pairs"])
+    u8_pairs = [p for p in cost["coll_pairs"] if p["u8"]]
     rec.update(
+        u8_pair_overlap_flops=sum(p["count"] * p["overlap_flops"]
+                                  for p in u8_pairs),
+        # per payload-gather pair: [bytes, hideable FLOPs] (§8 evidence)
+        u8_pairs=[[int(p["bytes"]), int(p["count"] * p["overlap_flops"])]
+                  for p in u8_pairs],
+        coll_pair_count=round(sum(p["count"]
+                                  for p in cost["coll_pairs"]), 2),
         status="ok", t_lower_s=round(t_lower, 1),
         t_compile_s=round(t_compile, 1),
         hlo_flops=flops, flops_per_device=flops, hlo_bytes=bytes_acc,
@@ -221,6 +241,28 @@ def ns_ab_pair(arch: str, shape_name: str, multi_pod: bool,
         ratio = on["flops_per_device"] / off["flops_per_device"]
         on["ns_flops_ratio"] = round(ratio, 4)
     return on, off
+
+
+def pipeline_ab_pair(arch: str, shape_name: str, multi_pod: bool,
+                     tag: str = "pipeab", wire_stages="auto",
+                     **kw) -> tuple[dict, dict]:
+    """Lower + compile one (arch, shape, mesh) with the staged wire
+    pipeline on (``wire_stages`` staged arm) AND off (``wire_stages=1``,
+    the monolithic single-gather arm, bit-identical to the PR-4 step) and
+    record the ``exposed_collective_ratio`` (staged / monolithic
+    ``t_exposed_collective_s``) on the staged record — the §8 acceptance
+    number: strictly < 1 when the K-gather schedule hides latency the
+    monolithic gather serialises."""
+    staged = lower_pair(arch, shape_name, multi_pod, tag=f"{tag}-staged",
+                        wire_stages=wire_stages, **kw)
+    mono = lower_pair(arch, shape_name, multi_pod, tag=f"{tag}-mono",
+                      wire_stages=1, **kw)
+    if staged.get("status") == "ok" and mono.get("status") == "ok" \
+            and mono.get("t_exposed_collective_s"):
+        staged["exposed_collective_ratio"] = round(
+            staged["t_exposed_collective_s"]
+            / mono["t_exposed_collective_s"], 4)
+    return staged, mono
 
 
 # --------------------------------------------------------------------- CLI
@@ -263,6 +305,16 @@ def main():
                     help="compile each combination with NS bucketing on "
                          "AND off and record ns_flops_ratio (per-device "
                          "HLO FLOPs, bucketed / per-leaf)")
+    ap.add_argument("--wire-stages", default="auto",
+                    help="staged wire pipeline stage cap (§8): 'auto' = "
+                         "one stage per NS bucket + the eager chunk, 1 = "
+                         "the monolithic single-gather arm, N caps the "
+                         "count by merging the smallest-FLOP buckets")
+    ap.add_argument("--pipeline-ab", action="store_true",
+                    help="compile each combination with the staged wire "
+                         "pipeline on AND off (wire_stages=1) and record "
+                         "exposed_collective_ratio (overlap-aware "
+                         "roofline, staged / monolithic)")
     ap.add_argument("--out", default=RESULTS)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -277,12 +329,19 @@ def main():
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     done = set() if args.force else _load_done(args.out)
+    wire_stages = args.wire_stages if args.wire_stages == "auto" \
+        else int(args.wire_stages)
     for arch in archs:
         for shape in shapes:
             for mesh in meshes:
-                tag = f"{args.tag}-nsab" if args.ns_ab else args.tag
-                key = (arch, shape, mesh,
-                       f"{tag}-on" if args.ns_ab else tag)
+                tag = args.tag
+                if args.ns_ab:
+                    tag, resume_sfx = f"{tag}-nsab", "-on"
+                elif args.pipeline_ab:
+                    tag, resume_sfx = f"{tag}-pipeab", "-staged"
+                else:
+                    resume_sfx = ""
+                key = (arch, shape, mesh, f"{tag}{resume_sfx}")
                 if key in done:
                     print(f"[skip-done] {key}", flush=True)
                     continue
@@ -294,17 +353,26 @@ def main():
                 try:
                     if args.ns_ab:
                         recs = list(ns_ab_pair(arch, shape, mesh == "multi",
-                                               tag=tag, **kw))
+                                               tag=tag,
+                                               wire_stages=wire_stages,
+                                               **kw))
+                    elif args.pipeline_ab:
+                        recs = list(pipeline_ab_pair(
+                            arch, shape, mesh == "multi", tag=tag,
+                            wire_stages=("auto" if wire_stages == 1
+                                         else wire_stages),
+                            ns_bucketing=not args.no_ns_bucketing, **kw))
                     else:
                         recs = [lower_pair(
                             arch, shape, mesh == "multi", tag=tag,
-                            ns_bucketing=not args.no_ns_bucketing, **kw)]
+                            ns_bucketing=not args.no_ns_bucketing,
+                            wire_stages=wire_stages, **kw)]
                 except Exception as e:
-                    # in --ns-ab mode the resume key is the -on tag; the
-                    # error record must carry it or resumes re-compile
-                    # every errored combo
+                    # in A/B modes the resume key is the -on/-staged tag;
+                    # the error record must carry it or resumes
+                    # re-compile every errored combo
                     recs = [{"arch": arch, "shape": shape, "mesh": mesh,
-                             "tag": f"{tag}-on" if args.ns_ab else tag,
+                             "tag": f"{tag}{resume_sfx}",
                              "status": "error",
                              "error": f"{type(e).__name__}: {e}"[:500],
                              "trace": traceback.format_exc()[-2000:]}]
@@ -314,7 +382,10 @@ def main():
                 for rec in recs:
                     brief = {k: rec.get(k) for k in
                              ("tag", "status", "t_compile_s", "hlo_flops",
-                              "coll_bytes", "bottleneck", "ns_flops_ratio",
+                              "coll_bytes", "bottleneck",
+                              "bottleneck_overlap",
+                              "t_exposed_collective_s", "n_wire_stages",
+                              "ns_flops_ratio", "exposed_collective_ratio",
                               "reason", "error")}
                     print(f"   -> {brief}", flush=True)
 

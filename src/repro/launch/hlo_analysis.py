@@ -93,3 +93,57 @@ def roofline_terms(flops: float, bytes_accessed: float,
     dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
     return {"t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
             "bottleneck": dom}
+
+
+def exposed_collective_terms(coll_pairs: list, coll_bytes: float, *,
+                             peak_flops: float = 197e12,
+                             ici_bw: float = 50e9) -> dict:
+    """Overlap-aware collective term (DESIGN.md §8): the plain roofline
+    charges ``coll_bytes / ici_bw`` as if every byte serialises ahead of
+    all compute, but the staged wire pipeline gives the scheduler K
+    independent gathers whose latency hides under the Newton-Schulz
+    compute of earlier stages. ``coll_pairs`` is the pair list from
+    ``hlo_cost.analyze`` ({kind, bytes, overlap_flops, count} per
+    collective, counts trip-scaled); per pair the *exposed* time is the
+    collective time minus the compute scheduled (or schedulable — see
+    hlo_cost's sync-collective model) inside its in-flight window,
+    floored at zero. Unpaired bytes (coll_bytes beyond the pair sum)
+    stay fully exposed.
+
+    Deliberately per-pair, as §8 defines it: the same independent
+    compute may be credited to several collectives' windows (all K
+    staged gathers are in flight together, so per gather this is what a
+    perfect latency-hiding schedule could achieve — but the aggregate
+    is a lower bound on exposure, not additive wall-time). Read it as
+    an A/B ratio between arms of the same program, where the shared
+    credit cancels, rather than as an absolute seconds figure."""
+    paired = sum(p["count"] * p["bytes"] for p in coll_pairs)
+    exposed = sum(p["count"] * max(0.0, p["bytes"] / ici_bw
+                                   - p["overlap_flops"] / peak_flops)
+                  for p in coll_pairs)
+    exposed += max(0.0, coll_bytes - paired) / ici_bw
+    t_x = coll_bytes / ici_bw
+    return {"t_exposed_collective_s": exposed,
+            "paired_coll_bytes": int(paired),
+            "hidden_collective_frac": (1.0 - exposed / t_x) if t_x else 0.0}
+
+
+def overlap_roofline_terms(flops: float, bytes_accessed: float,
+                           coll_bytes: float, coll_pairs: list, *,
+                           peak_flops: float = 197e12,
+                           hbm_bw: float = 819e9,
+                           ici_bw: float = 50e9) -> dict:
+    """``roofline_terms`` plus the exposed-collective term, with the
+    bottleneck recomputed against the *exposed* (not total) collective
+    time — the sum-of-terms assumption replaced by measured overlap."""
+    terms = roofline_terms(flops, bytes_accessed, coll_bytes,
+                           peak_flops=peak_flops, hbm_bw=hbm_bw,
+                           ici_bw=ici_bw)
+    terms.update(exposed_collective_terms(coll_pairs, coll_bytes,
+                                          peak_flops=peak_flops,
+                                          ici_bw=ici_bw))
+    dom = max((terms["t_compute_s"], "compute"),
+              (terms["t_memory_s"], "memory"),
+              (terms["t_exposed_collective_s"], "collective"))[1]
+    terms["bottleneck_overlap"] = dom
+    return terms

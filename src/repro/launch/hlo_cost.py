@@ -25,6 +25,24 @@ Trip counts come from the loop condition: the largest integer literal in
 a `compare(..., constant)` of the condition computation (exact for
 lax.scan/fori_loop lowerings).
 
+**Overlap accounting** (the staged wire pipeline, DESIGN.md §8): every
+collective additionally yields a *pair record* with the compute FLOPs
+the schedule lets it hide:
+
+  * async ``<kind>-start`` / ``<kind>-done`` pairs (TPU/GPU text)
+    attribute the FLOPs of the instructions *scheduled between* start
+    and done — the overlap the backend actually emitted;
+  * sync collectives (the CPU backend never splits them) attribute the
+    FLOPs of instructions scheduled before the collective's first
+    consumer that are neither ancestors nor descendants of it — the
+    overlap a latency-hiding scheduler *could* realise by hoisting the
+    issue to the operands-ready point (compiled HLO is scheduled:
+    instruction order is the sequence the backend runs).
+
+Pairs inside while bodies carry ``count = trip_count`` (bytes/FLOPs are
+per occurrence). ``launch/hlo_analysis.py`` turns the pair list into the
+``exposed_collective`` roofline term.
+
 Validated against unrolled references in tests/test_hlo_cost.py.
 """
 from __future__ import annotations
@@ -192,6 +210,28 @@ def _trip_count(cond: Computation) -> int:
     return best
 
 
+def _while_trips(ins: Instr, comps: dict[str, Computation]) -> int:
+    """Trip count of one while instruction: XLA's backend_config when
+    present, else the loop-condition literal."""
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.line)
+    if m:
+        return int(m.group(1))
+    cond = _COND.search(ins.attrs)
+    if cond:
+        cc = comps.get(cond.group(1).lstrip("%"))
+        if cc:
+            return _trip_count(cc)
+    return 1
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    # rough: 2 * |out| * (|rhs| / out_channels) — fine, convs are rare
+    dims = _first_shape_dims(comp.types.get(ins.operands[1], ""))
+    return 2.0 * comp.elems.get(ins.name, 0) * max(
+        comp.elems.get(ins.operands[1], 1)
+        // max(dims[-1:][0] if dims else 1, 1), 1)
+
+
 def _dot_flops(ins: Instr, comp: Computation) -> float:
     out_elems = comp.elems.get(ins.name, 0)
     lhs_type = comp.types.get(ins.operands[0], "")
@@ -242,6 +282,10 @@ class Cost:
     hbm_bytes: float = 0.0
     coll_bytes: float = 0.0
     coll_by_kind: dict = field(default_factory=dict)
+    # one record per collective (pair accounting, module docstring):
+    # {kind, bytes, u8, overlap_flops, count} — count scales with the
+    # enclosing while trip counts, bytes/flops stay per occurrence.
+    pairs: list = field(default_factory=list)
     # uint8 collective operands, tracked separately. With wire packing
     # on (the default) this is exactly the fused repro.wire payload
     # buffer — count 1, bytes == WireLayout.total_nbytes — comparable
@@ -260,6 +304,8 @@ class Cost:
         self.u8_coll_count += scale * other.u8_coll_count
         for k, v in other.coll_by_kind.items():
             self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + scale * v
+        self.pairs.extend(dict(p, count=p["count"] * scale)
+                          for p in other.pairs)
 
 
 def cost_analysis_dict(compiled) -> dict:
@@ -271,9 +317,102 @@ def cost_analysis_dict(compiled) -> dict:
     return cost
 
 
+_CALL_LIKE = ("call", "conditional", "map", "reduce", "reduce-window",
+              "scatter", "select-and-scatter", "sort", "custom-call")
+
+
+def _reach(comp: Computation, idx: int, pos: dict, users: dict,
+           forward: bool) -> set[int]:
+    """Instruction indices transitively reachable from ``idx`` —
+    descendants (forward=True, via users) or ancestors (via operands)."""
+    seen: set[int] = set()
+    frontier = [idx]
+    while frontier:
+        i = frontier.pop()
+        if forward:
+            nxt = users.get(comp.instrs[i].name, [])
+        else:
+            nxt = [pos[o] for o in comp.instrs[i].operands if o in pos]
+        for j in nxt:
+            if j not in seen:
+                seen.add(j)
+                frontier.append(j)
+    seen.discard(idx)
+    return seen
+
+
+def _pairs_for_comp(comp: Computation, instr_flops) -> list[dict]:
+    """Pair records for one computation's collectives (module docstring):
+    async start/done pairs use the scheduled window; sync collectives use
+    the dependence-filtered prefix before their first consumer."""
+    n = len(comp.instrs)
+    fl = [instr_flops(ins) for ins in comp.instrs]
+    prefix = [0.0]
+    for v in fl:
+        prefix.append(prefix[-1] + v)
+    pos = {ins.name: i for i, ins in enumerate(comp.instrs)}
+    users: dict[str, list[int]] = defaultdict(list)
+    for i, ins in enumerate(comp.instrs):
+        for o in ins.operands:
+            if o in pos:
+                users[o].append(i)
+    pairs = []
+    for i, ins in enumerate(comp.instrs):
+        base = ins.op.rstrip(".0123456789")
+        kind = next((k for k in _COLLECTIVES if base.startswith(k)), None)
+        if kind is None or base.endswith("-done"):
+            continue
+        b = sum(comp.sizes.get(o, 0) for o in ins.operands)
+        u8 = any(comp.types.get(o, "").startswith("u8[")
+                 for o in ins.operands)
+        if base.endswith("-start"):
+            # scheduled overlap: FLOPs strictly between start and done
+            j = next((jx for jx in range(i + 1, n)
+                      if comp.instrs[jx].op.rstrip(".0123456789")
+                      == kind + "-done"
+                      and ins.name in comp.instrs[jx].operands), n)
+            flops = prefix[j] - prefix[i + 1]
+        else:
+            # sync collective: *schedulable* overlap — the FLOPs of every
+            # instruction that neither feeds (ancestor) nor reads
+            # (descendant) the collective. A latency-hiding scheduler is
+            # free to keep such compute in flight between the issue
+            # (operands ready) and the first consume; the sync schedule
+            # the CPU backend emits carries no overlap information, so
+            # the dependence cone is the honest static model. The
+            # monolithic payload gather's cone covers the whole receive+
+            # LMO phase (overlap ~0); each staged gather excludes only
+            # its own stage's cone (DESIGN.md §8).
+            anc = _reach(comp, i, pos, users, forward=False)
+            desc = _reach(comp, i, pos, users, forward=True)
+            flops = sum(fl[k] for k in range(n)
+                        if k != i and k not in anc and k not in desc)
+        pairs.append({"kind": kind, "bytes": float(b), "u8": bool(u8),
+                      "overlap_flops": float(flops), "count": 1.0})
+    return pairs
+
+
 def analyze(text: str) -> dict:
     comps = parse_module(text)
     memo: dict[tuple[str, bool], Cost] = {}
+
+    def instr_flops(comp: Computation, ins: Instr) -> float:
+        """Trip-scaled FLOPs of ONE instruction (for the pair windows)."""
+        base = ins.op.rstrip(".0123456789")
+        if base in ("dot", "dot-general"):
+            return _dot_flops(ins, comp)
+        if base == "convolution":
+            return _conv_flops(ins, comp)
+        if base == "while":
+            body = _CALLED.search(ins.attrs)
+            if body:
+                return _while_trips(ins, comps) * comp_cost(
+                    body.group(1).lstrip("%"), True).flops
+            return 0.0
+        if base == "fusion" or base in _CALL_LIKE:
+            return sum(comp_cost(t.lstrip("%"), True).flops
+                       for t in _CALLED.findall(ins.attrs))
+        return 0.0
 
     def comp_cost(name: str, fused: bool) -> Cost:
         """fused=True: inside a fusion — only FLOPs count (no HBM)."""
@@ -293,14 +432,7 @@ def analyze(text: str) -> dict:
                     c.hbm_bytes += comp.sizes.get(ins.name, 0) + sum(
                         comp.sizes.get(o, 0) for o in ins.operands)
             elif base == "convolution":
-                # rough: 2 * |out| * (|lhs| / batch) — fine, convs are rare
-                c.flops += 2.0 * comp.elems.get(ins.name, 0) * max(
-                    comp.elems.get(ins.operands[1], 1)
-                    // max(_first_shape_dims(
-                        comp.types.get(ins.operands[1], ""))[-1:][0]
-                        if _first_shape_dims(
-                            comp.types.get(ins.operands[1], "")) else 1, 1),
-                    1)
+                c.flops += _conv_flops(ins, comp)
                 if not fused:
                     c.hbm_bytes += comp.sizes.get(ins.name, 0) + sum(
                         comp.sizes.get(o, 0) for o in ins.operands)
@@ -336,23 +468,10 @@ def analyze(text: str) -> dict:
                             _operand_read_bytes(comp, ins, comps)
             elif base == "while":
                 body = _CALLED.search(ins.attrs)
-                cond = _COND.search(ins.attrs)
-                # exact trip count from XLA's backend_config when present
-                m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.line)
-                if m:
-                    trips = int(m.group(1))
-                else:
-                    trips = 1
-                    if cond:
-                        cc = comps.get(cond.group(1).lstrip("%"))
-                        if cc:
-                            trips = _trip_count(cc)
                 if body:
                     c.add(comp_cost(body.group(1).lstrip("%"), fused),
-                          scale=float(trips))
-            elif base in ("call", "conditional", "map", "reduce",
-                          "reduce-window", "scatter", "select-and-scatter",
-                          "sort", "custom-call"):
+                          scale=float(_while_trips(ins, comps)))
+            elif base in _CALL_LIKE:
                 for target in _CALLED.findall(ins.attrs):
                     c.add(comp_cost(target.lstrip("%"), fused))
                 if not fused and base != "call":
@@ -376,6 +495,9 @@ def analyze(text: str) -> dict:
                 if not fused:
                     c.hbm_bytes += comp.sizes.get(ins.name, 0) + sum(
                         comp.sizes.get(o, 0) for o in ins.operands)
+        if not fused:
+            c.pairs.extend(_pairs_for_comp(
+                comp, lambda ins: instr_flops(comp, ins)))
         memo[key] = c
         return c
 
@@ -390,6 +512,7 @@ def analyze(text: str) -> dict:
             "coll_by_kind": {k: int(v) for k, v in c.coll_by_kind.items()},
             "u8_coll_bytes": int(c.u8_coll_bytes),
             "u8_coll_count": int(c.u8_coll_count),
+            "coll_pairs": [dict(p) for p in c.pairs],
             "entry": entry}
 
 

@@ -64,10 +64,12 @@ def main():
     wire = plan.w2s_bytes_per_worker(tr.opt.cfg.wire_dtype)
     dense = plan.dense_bytes(tr.opt.cfg.wire_dtype)
     buf = plan.wire_layout(tr.opt.cfg.wire_dtype).total_nbytes
+    stages = plan.stage_plan(wire_stages=tr.opt.cfg.wire_stages).n_stages
     print(f"arch={cfg.name} params="
           f"{sum(p.size for p in jax.tree.leaves(state['x']))} "
           f"w2s_bytes/worker={wire} ({wire / dense:.3f} of dense) "
-          f"wire_buffer={buf} ({buf / dense:.3f} of dense)")
+          f"wire_buffer={buf} ({buf / dense:.3f} of dense) "
+          f"wire_stages={stages}")
     t0 = time.time()
     for i in range(start, args.steps):
         state, aux = step_fn(state, data.batch_at(i), sched(i))

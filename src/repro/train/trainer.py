@@ -51,6 +51,9 @@ class TrainerConfig:
     zero1_lmo: bool = False   # beyond-paper: layer-parallel LMO sharding
     wire_pack: bool = True    # fused uint8 payload buffer (repro.wire)
     ns_bucketing: bool = True  # shape-bucketed batched NS LMOs (§7)
+    wire_stages: Any = "auto"  # staged wire pipeline (§8): "auto" = one
+                               # stage per NS bucket + eager chunk; 1 =
+                               # the monolithic single-gather A/B arm
 
 
 class Trainer:
@@ -62,7 +65,7 @@ class Trainer:
             n_workers=tcfg.n_workers, beta=tcfg.beta, w2s=tcfg.w2s,
             s2w=tcfg.s2w, ns_steps=tcfg.ns_steps,
             use_pallas=tcfg.use_pallas, wire_pack=tcfg.wire_pack,
-            ns_bucketing=tcfg.ns_bucketing))
+            ns_bucketing=tcfg.ns_bucketing, wire_stages=tcfg.wire_stages))
         # metas are static: build once from the model's abstract init
         from repro.models.api import abstract_params
         self._params_shapes, self.metas = abstract_params(model)
@@ -111,11 +114,15 @@ class Trainer:
 
             def reshard(payloads):
                 # w2s communication: with wire packing this receives ONE
-                # [n_workers, total_nbytes] uint8 buffer; pin it to the
-                # worker axis, then replicate == a single fused
-                # all-gather of compressed payload bytes over exactly
-                # the slow links (DESIGN.md §3, §6). The tree.map keeps
-                # the unpacked (wire_pack=False) per-leaf path working.
+                # [n_workers, nbytes] uint8 buffer per call; pin it to
+                # the worker axis, then replicate == a fused all-gather
+                # of compressed payload bytes over exactly the slow
+                # links (DESIGN.md §3, §6). The staged wire pipeline
+                # (§8) invokes this hook once per stage sub-buffer —
+                # K independent payload all-gathers whose bytes sum to
+                # WireLayout.total_nbytes — and the monolithic arm
+                # (wire_stages=1) exactly once. The tree.map keeps the
+                # unpacked (wire_pack=False) per-leaf path working.
                 def one(x):
                     if x.ndim and x.shape[0] % wn == 0:
                         x = jax.lax.with_sharding_constraint(x, sharded)

@@ -20,6 +20,7 @@ inverse, so the EF21 sender/receiver invariant survives the wire.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Any
@@ -124,6 +125,71 @@ class WireLayout:
         return [{"offset": s.offset, "slice_nbytes": s.slice_nbytes,
                  "n_stack": s.n_stack, "codec": s.codec_id}
                 for s in self.specs]
+
+
+@dataclass(frozen=True)
+class StagedWireLayout:
+    """K contiguous stage sub-buffers repartitioning one ``WireLayout``
+    along the staged wire pipeline (DESIGN.md §8).
+
+    Each stage is itself a ``WireLayout`` over a subset of the plan's
+    leaves (offsets rebased to be contiguous within the stage), so the
+    per-stage pack/unpack reuses the exact §6 codec machinery — every
+    leaf keeps its byte layout, only its *home buffer* changes. The
+    stage byte counts sum to ``base.total_nbytes`` byte-for-byte: the
+    "exactly ONE u8 all-gather of total_nbytes" invariant of §6 relaxes
+    to "exactly K u8 all-gathers whose bytes sum to total_nbytes"."""
+    base: WireLayout                          # the monolithic layout
+    stage_leaf_ids: tuple[tuple[int, ...], ...]  # per stage, plan-leaf ids
+    stages: tuple[WireLayout, ...]            # per-stage sub-layouts
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def total_nbytes(self) -> int:
+        return self.base.total_nbytes
+
+    def stage_nbytes(self, k: int) -> int:
+        return self.stages[k].total_nbytes
+
+    def pack_stage(self, k: int, flat_payloads: list) -> jax.Array:
+        """Pack stage ``k``'s leaves out of the FULL plan-flat payload
+        list (same convention as ``WireLayout.pack``) into that stage's
+        ``[n_workers, stage_nbytes(k)]`` uint8 sub-buffer."""
+        return self.stages[k].pack(
+            [flat_payloads[i] for i in self.stage_leaf_ids[k]])
+
+    def unpack_stage(self, k: int, buf: jax.Array) -> list:
+        """Bit-exact inverse of ``pack_stage``: payload list aligned with
+        ``stage_leaf_ids[k]``."""
+        return self.stages[k].unpack(buf)
+
+
+def build_staged_layout(layout: WireLayout,
+                        stage_leaf_ids) -> StagedWireLayout:
+    """Repartition ``layout`` into per-stage sub-layouts. The stage leaf
+    id lists must partition ``range(len(layout.specs))`` — every leaf in
+    exactly one stage — so the repartition is byte-exact by
+    construction (validated)."""
+    stage_leaf_ids = tuple(tuple(ids) for ids in stage_leaf_ids)
+    flat = [i for ids in stage_leaf_ids for i in ids]
+    if sorted(flat) != list(range(len(layout.specs))):
+        raise ValueError(
+            f"stage leaf ids {stage_leaf_ids} do not partition the "
+            f"{len(layout.specs)} layout leaves")
+    stages = []
+    for ids in stage_leaf_ids:
+        specs, offset = [], 0
+        for i in ids:
+            spec = dataclasses.replace(layout.specs[i], offset=offset)
+            offset += spec.region_nbytes
+            specs.append(spec)
+        stages.append(WireLayout(specs=tuple(specs), total_nbytes=offset))
+    assert sum(s.total_nbytes for s in stages) == layout.total_nbytes
+    return StagedWireLayout(base=layout, stage_leaf_ids=stage_leaf_ids,
+                            stages=tuple(stages))
 
 
 def build_layout(plan: Any, wire_dtype) -> WireLayout:

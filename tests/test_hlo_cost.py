@@ -89,6 +89,137 @@ def test_parse_module_structure():
     assert a["flops"] >= 2 * 32 * 32 * 32
 
 
+# ------------------------------------------- async-collective pair parsing
+#
+# Hand-written HLO: the all-gather-start/done pairing and overlap
+# attribution must not depend on what the local backend emits (the CPU
+# backend never splits collectives — there the analyzer synthesises
+# pairs from the dependence cone, covered further down).
+
+ASYNC_FLAT = """
+HloModule m, is_scheduled=true
+
+ENTRY %main (p0: f32[1,256], w: f32[128,128]) -> f32[128,128] {
+  %p0 = f32[1,256] parameter(0)
+  %w = f32[128,128] parameter(1)
+  %ag-start = (f32[1,256], f32[8,256]) all-gather-start(f32[1,256] %p0), dimensions={0}
+  %dot1 = f32[128,128] dot(f32[128,128] %w, f32[128,128] %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag-done = f32[8,256] all-gather-done((f32[1,256], f32[8,256]) %ag-start)
+  %dot2 = f32[128,128] dot(f32[128,128] %dot1, f32[128,128] %dot1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[128,128] add(f32[128,128] %dot2, f32[128,128] %dot1)
+}
+"""
+
+DOT_FLOPS = 2 * 128 * 128 * 128
+
+
+def test_async_pair_attributes_scheduled_window():
+    """An all-gather-start/done pair hides exactly the FLOPs scheduled
+    between start and done — dot1 (in the window), not dot2 (after)."""
+    a = analyze(ASYNC_FLAT)
+    assert a["coll_bytes"] == 1 * 256 * 4        # start operand, not -done
+    assert a["flops"] == 2 * DOT_FLOPS
+    (p,) = a["coll_pairs"]
+    assert p["kind"] == "all-gather" and p["count"] == 1.0
+    assert p["bytes"] == 1 * 256 * 4 and not p["u8"]
+    assert p["overlap_flops"] == DOT_FLOPS
+
+
+ASYNC_WHILE = """
+HloModule m, is_scheduled=true
+
+%cond (pc: (s32[], f32[1,256], f32[128,128])) -> pred[] {
+  %pc = (s32[], f32[1,256], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[1,256], f32[128,128]) %pc), index=0
+  %trip = s32[] constant(6)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %trip), direction=LT
+}
+
+%body (pb: (s32[], f32[1,256], f32[128,128])) -> (s32[], f32[1,256], f32[128,128]) {
+  %pb = (s32[], f32[1,256], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[1,256], f32[128,128]) %pb), index=0
+  %x = f32[1,256] get-tuple-element((s32[], f32[1,256], f32[128,128]) %pb), index=1
+  %w = f32[128,128] get-tuple-element((s32[], f32[1,256], f32[128,128]) %pb), index=2
+  %ag-start.1 = (f32[1,256], f32[8,256]) all-gather-start(f32[1,256] %x), dimensions={0}
+  %dotb = f32[128,128] dot(f32[128,128] %w, f32[128,128] %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag-done.1 = f32[8,256] all-gather-done((f32[1,256], f32[8,256]) %ag-start.1)
+  %one = s32[] constant(1)
+  %ip = s32[] add(s32[] %i, s32[] %one)
+  %xs = f32[1,256] slice(f32[8,256] %ag-done.1), slice={[0:1], [0:256]}
+  ROOT %tup = (s32[], f32[1,256], f32[128,128]) tuple(s32[] %ip, f32[1,256] %xs, f32[128,128] %dotb)
+}
+
+ENTRY %main (p: (s32[], f32[1,256], f32[128,128])) -> (s32[], f32[1,256], f32[128,128]) {
+  %p = (s32[], f32[1,256], f32[128,128]) parameter(0)
+  ROOT %loop = (s32[], f32[1,256], f32[128,128]) while((s32[], f32[1,256], f32[128,128]) %p), condition=%cond, body=%body
+}
+"""
+
+
+def test_async_pair_in_while_body_scales_with_trips():
+    """A start/done pair inside a while body keeps per-occurrence bytes
+    and overlap FLOPs with count = trip count — so both the paired bytes
+    (count x bytes == coll_bytes) and the attributed compute stay
+    consistent with the trip-count-aware totals."""
+    a = analyze(ASYNC_WHILE)
+    assert a["flops"] == 6 * DOT_FLOPS
+    assert a["coll_bytes"] == 6 * 1024
+    (p,) = a["coll_pairs"]
+    assert p["count"] == 6.0
+    assert p["bytes"] == 1024 and p["overlap_flops"] == DOT_FLOPS
+    assert p["count"] * p["bytes"] == a["coll_bytes"]
+
+
+SYNC_DEPS = """
+HloModule m, is_scheduled=true
+
+ENTRY %main (a: u8[1,256], w: f32[128,128]) -> f32[128,128] {
+  %a = u8[1,256] parameter(0)
+  %w = f32[128,128] parameter(1)
+  %pre = u8[1,256] add(u8[1,256] %a, u8[1,256] %a)
+  %ag = u8[8,256] all-gather(u8[1,256] %pre), dimensions={0}
+  %ind = f32[128,128] dot(f32[128,128] %w, f32[128,128] %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %cvt = f32[8,256] convert(u8[8,256] %ag)
+  %red = f32[128,128] dot(f32[8,256] %cvt, f32[8,256] %cvt), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  ROOT %out = f32[128,128] add(f32[128,128] %ind, f32[128,128] %red)
+}
+"""
+
+
+def test_sync_pair_attributes_dependence_cone():
+    """A sync collective (CPU text) hides the FLOPs outside its
+    dependence cone: the independent dot counts, the dot consuming the
+    gathered bytes (descendant) does not — and the u8 flag survives."""
+    a = analyze(SYNC_DEPS)
+    (p,) = a["coll_pairs"]
+    assert p["kind"] == "all-gather" and p["u8"]
+    assert p["bytes"] == 256 and p["count"] == 1.0
+    assert p["overlap_flops"] == DOT_FLOPS     # %ind only, never %red
+
+
+def test_exposed_collective_terms_floor_and_unpaired():
+    """Roofline side: per-pair exposure floors at zero, unpaired bytes
+    stay fully exposed, and full overlap drives the term to zero."""
+    from repro.launch.hlo_analysis import (exposed_collective_terms,
+                                           overlap_roofline_terms)
+    pk, bw = 100.0, 10.0                # 1 FLOP == 0.01 s, 1 B == 0.1 s
+    pairs = [{"kind": "all-gather", "bytes": 4.0, "u8": True,
+              "overlap_flops": 1000.0, "count": 1.0},   # fully hidden
+             {"kind": "all-gather", "bytes": 2.0, "u8": True,
+              "overlap_flops": 10.0, "count": 2.0}]     # 0.2s - 0.1s each
+    t = exposed_collective_terms(pairs, coll_bytes=18.0,
+                                 peak_flops=pk, ici_bw=bw)
+    # 2 x (0.2 - 0.1) exposed + (18 - 8) unpaired bytes / bw
+    assert abs(t["t_exposed_collective_s"] - (0.2 + 1.0)) < 1e-12
+    assert t["paired_coll_bytes"] == 8
+    full = overlap_roofline_terms(1.0, 0.0, 8.0, pairs[:1],
+                                  peak_flops=pk, hbm_bw=1.0, ici_bw=bw)
+    # the one pair covers half the bytes; the other half stays exposed
+    assert abs(full["t_exposed_collective_s"] - 0.4) < 1e-12
+    assert full["t_collective_s"] == 0.8
+    assert full["bottleneck_overlap"] == "collective"
+
+
 def test_top_contributors_consistent_with_total():
     def f_scan(x, w):
         def body(x, wi):

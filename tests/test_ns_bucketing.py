@@ -301,20 +301,32 @@ def test_spmd_bucketing_ab_flop_ratio_and_equality():
       * bucketing-on / bucketing-off per-device HLO FLOPs <= 1.02x
         (the bucket concat used to drop per-leaf TP/zero-1 shardings and
         replicate the NS chain: +13.7% on the 512-chip granite dry-run);
-      * the SPMD wire invariants hold in BOTH arms: exactly one u8
-        payload all-gather whose measured bytes == WireLayout account;
+      * the staged wire invariant (§8) holds: the staged arm lowers
+        exactly K u8 payload all-gathers (K = pipeline stages), the
+        monolithic and per-leaf arms exactly one, all measuring bytes
+        == the WireLayout account byte-for-byte;
+      * the staged arm's overlap-aware exposed-collective time is
+        strictly below the monolithic arm's, and staged == monolithic
+        stays bit-equal (a pure repartition) even under TP;
       * bucketed == per-leaf stays BIT-equal on the jnp path on the
         (8, 1) mesh, where sharding only ever slices batch/stack dims
         (on the (4, 2) mesh TP splits NS contractions, so cross-arm
         agreement is reduction-order-limited: ulp-level);
       * the shard_map-wrapped fused Pallas iteration matches the oracle
         on per-device sub-batches."""
-    from benchmarks.ns_bench import NS_SPMD_RATIO_BOUND, spmd_ab
+    from benchmarks.ns_bench import (NS_SPMD_RATIO_BOUND,
+                                     PIPELINE_EXPOSED_BOUND, spmd_ab)
 
     rec = spmd_ab()
     assert rec["ns_flops_ratio"] <= NS_SPMD_RATIO_BOUND, rec
-    assert rec["u8_count_on"] == 1 and rec["u8_count_off"] == 1, rec
-    assert rec["u8_bytes_on"] == rec["u8_bytes_off"] == rec["wire_bytes"], rec
+    assert rec["n_stages_on"] > 1, rec
+    assert rec["u8_count_on"] == rec["n_stages_on"], rec
+    assert rec["u8_count_off"] == 1 and rec["u8_count_mono"] == 1, rec
+    assert rec["u8_bytes_on"] == rec["u8_bytes_off"] \
+        == rec["u8_bytes_mono"] == rec["wire_bytes"], rec
+    assert rec["exposed_ratio"] is not None \
+        and rec["exposed_ratio"] <= PIPELINE_EXPOSED_BOUND, rec
+    assert rec["bit_equal_staged_mono"], rec
     assert rec["bit_equal_8x1"], rec
     assert rec["x_max_abs_diff_4x2"] < 1e-6, rec
     assert rec["shard_map_max_err"] < 2e-3, rec
@@ -337,6 +349,23 @@ def test_bucketed_padding_exactness_property(bsz, m, n, seed):
 
 
 # ------------------------------------------------------------ LRU plan cache
+
+def test_plan_cache_keyed_on_leaf_dtypes(key):
+    """Regression: the LRU key carried (treedef, shapes, metas) but not
+    leaf dtypes, so switching param dtype silently reused a stale
+    LayerPlan (and its memoised wire layouts / ns buckets)."""
+    opt = EF21Muon(EF21MuonConfig())
+    meta = {"w": ParamMeta("spectral", 1.0, 0)}
+    p32 = {"w": jnp.zeros((8, 8), jnp.float32)}
+    pbf = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+    plan32 = opt.plan(p32, meta)
+    planbf = opt.plan(pbf, meta)
+    assert planbf is not plan32
+    assert len(opt._plans) == 2
+    # both keys stay live and identity-stable
+    assert opt.plan(p32, meta) is plan32
+    assert opt.plan(pbf, meta) is planbf
+
 
 def test_plan_cache_lru_eviction(key):
     """Shape sweeps evict the oldest plan only — the 8 most recent stay

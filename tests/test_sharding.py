@@ -224,6 +224,8 @@ compiled = lowered.compile()
 a = analyze(compiled.as_text())
 plan = tr.layer_plan()
 wire_dt = tr.opt.cfg.wire_dtype
+splan = plan.stage_plan(mesh=mesh, wire_stages=tr.opt.cfg.wire_stages)
+staged = plan.staged_wire_layout(wire_dt, splan)
 # run two real steps on 8 host devices
 state, aux1 = step(state, batch, 0.01)
 state, aux2 = step(state, data.batch_at(1), 0.01)
@@ -233,6 +235,10 @@ print(json.dumps({
     "u8_bytes": a["u8_coll_bytes"], "u8_count": a["u8_coll_count"],
     "analytic_bytes": plan.w2s_bytes_per_worker(wire_dt),
     "wire_bytes": plan.wire_layout(wire_dt).total_nbytes,
+    "n_stages": splan.n_stages,
+    "stage_bytes": [staged.stage_nbytes(k) for k in range(splan.n_stages)],
+    "u8_pair_bytes": sorted(int(p["bytes"]) for p in a["coll_pairs"]
+                            if p["u8"]),
     "flops": a["flops"],
 }))
 """
@@ -241,11 +247,13 @@ print(json.dumps({
 @pytest.mark.slow
 def test_spmd_train_step_runs_on_8_devices():
     """Real SPMD execution: the jitted EF21-Muon step runs on an 8-device
-    host mesh, produces finite losses, and the w2s send is ONE fused
-    uint8 payload all-gather whose measured HLO bytes equal the
-    repro.wire offset-table account and agree with the analytic Table-2
-    value (within 1.15x; the wire is *below* it because narrow index
-    encoding beats the paper's 4-byte-index convention)."""
+    host mesh, produces finite losses, and the w2s send obeys the staged
+    wire invariant (DESIGN.md §8): exactly K uint8 payload all-gathers —
+    one per pipeline stage — whose measured HLO bytes sum byte-for-byte
+    to the repro.wire offset-table account, each gather moving exactly
+    its stage sub-buffer, and the total agreeing with the analytic
+    Table-2 value (within 1.15x; the wire is *below* it because narrow
+    index encoding beats the paper's 4-byte-index convention)."""
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
@@ -256,10 +264,16 @@ def test_spmd_train_step_runs_on_8_devices():
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert np.isfinite(rec["loss1"]) and np.isfinite(rec["loss2"])
     assert rec["coll_bytes"] > 0
-    # exactly one fused payload collective, not one per payload leaf
-    assert rec["u8_count"] == 1, rec
-    # measured collective bytes == the static wire layout, byte-for-byte
+    # exactly K fused payload collectives — one per pipeline stage, not
+    # one per payload leaf (the default wire_stages="auto" stages the
+    # buffer along the NS buckets; K > 1 on this model)
+    assert rec["n_stages"] > 1, rec
+    assert rec["u8_count"] == rec["n_stages"], rec
+    # measured collective bytes sum == the static wire layout,
+    # byte-for-byte, and each gather moves exactly one stage sub-buffer
     assert rec["u8_bytes"] == rec["wire_bytes"], rec
+    assert sum(rec["stage_bytes"]) == rec["wire_bytes"], rec
+    assert rec["u8_pair_bytes"] == sorted(rec["stage_bytes"]), rec
     # and the wire agrees with the analytic Table-2 account (<= 1.15x)
     assert rec["u8_bytes"] <= 1.15 * rec["analytic_bytes"], rec
     assert rec["u8_bytes"] >= 0.25 * rec["analytic_bytes"], rec
