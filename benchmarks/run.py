@@ -1,24 +1,34 @@
 """Benchmark harness — one module per paper table/figure plus the
-roofline report. Prints JSON rows per benchmark.
+roofline report. Prints JSON rows per benchmark and writes one
+``BENCH_<name>.json`` artifact per benchmark into the repo root (the
+committed perf trajectory; fast CI refreshes them every run).
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME[,NAME]]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 BENCHES = ("table2", "wire", "ns", "step", "ef_necessity", "convergence",
            "kernels", "fig1", "roofline")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced step counts (CI)")
-    ap.add_argument("--only", default=None, help=f"run one of {BENCHES}")
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {BENCHES}")
+    ap.add_argument("--out-dir", default=REPO_ROOT,
+                    help="where the BENCH_<name>.json artifacts go "
+                         "(default: the repo root)")
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="print rows only, write no BENCH_*.json")
     args = ap.parse_args()
 
     from benchmarks import (convergence, ef_necessity, fig1_compression,
@@ -28,7 +38,11 @@ def main() -> None:
             "step": step_bench, "ef_necessity": ef_necessity,
             "convergence": convergence, "kernels": kernel_bench,
             "fig1": fig1_compression, "roofline": roofline_report}
-    names = [args.only] if args.only else list(BENCHES)
+    names = [n.strip() for n in args.only.split(",") if n.strip()] \
+        if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in mods]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; choose from {BENCHES}")
     failures = 0
     for name in names:
         t0 = time.time()
@@ -37,6 +51,13 @@ def main() -> None:
             rows = mods[name].run(fast=args.fast)
             for r in rows:
                 print(json.dumps(r), flush=True)
+            if not args.no_artifacts:
+                out = os.path.join(args.out_dir, f"BENCH_{name}.json")
+                with open(out, "w") as f:
+                    json.dump({"bench": name, "fast": bool(args.fast),
+                               "rows": rows}, f, indent=2)
+                    f.write("\n")
+                print(f"wrote {out}", flush=True)
         except Exception as e:
             failures += 1
             print(json.dumps({"bench": name, "status": "error",

@@ -1,17 +1,23 @@
 """Wire-bytes smoke: analytic Table-2 accounting vs the exact bytes the
-fused repro.wire buffer moves, on the paper's NanoGPT-124M shapes.
+fused repro.wire buffers move, on the paper's NanoGPT-124M shapes —
+BOTH directions (w2s payload gather and s2w model-update broadcast, §9).
 
-Three numbers per compressor (all per worker->server message, bf16 wire):
+Per compressor (bf16 wire, same compressor on both legs):
 
-  dense     uncompressed message bytes
-  analytic  LayerPlan.w2s_bytes_per_worker — the paper's Table-2
-            convention (4-byte indices)
-  wire      WireLayout.total_nbytes — the fused uint8 buffer the payload
-            all-gather actually moves (narrow indices, 9-bit Natural)
+  dense          uncompressed message bytes
+  analytic       LayerPlan.w2s_bytes_per_worker — the paper's Table-2
+                 convention (4-byte indices)
+  wire           w2s WireLayout.total_nbytes — the fused uint8 buffer
+                 the payload all-gather actually moves
+  s2w_analytic   LayerPlan.s2w_bytes_per_round (same convention)
+  s2w_wire       s2w WireLayout.total_nbytes — what the model-update
+                 broadcast moves per round
+  two_way_*      the per-round totals the bidirectional account sums to
 
-plus an eval_shape check that packing really produces a buffer of
-exactly ``wire`` bytes, and a concrete pack/unpack round-trip (bit-exact)
-with wall-clock timings to start the perf trajectory.
+plus eval_shape checks that packing really produces buffers of exactly
+those byte counts, and concrete pack/unpack round-trips (bit-exact) with
+wall-clock timings. The ``*_vs_analytic <= 1.15`` bounds are asserted in
+``run()`` so every harness (CI fast job included) enforces them.
 
     PYTHONPATH=src python -m benchmarks.wire_bytes [--out BENCH_wire.json]
 """
@@ -68,19 +74,8 @@ def run(fast: bool = False):
     wire_dt = jnp.bfloat16
     rows = []
     comps = COMPRESSORS[:1] if fast else COMPRESSORS
-    for name in comps:
-        opt = EF21Muon(EF21MuonConfig(n_workers=1, w2s=name,
-                                      wire_dtype=wire_dt))
-        plan = opt.plan(shapes, metas)
-        layout = plan.wire_layout(wire_dt)
-        dense = plan.dense_bytes(wire_dt)
-        analytic = plan.w2s_bytes_per_worker(wire_dt)
-        wire = layout.total_nbytes
-        # the buffer the step would all-gather is exactly `wire` bytes
-        structs = layout.payload_structs(n_workers=1)
-        buf_struct = jax.eval_shape(layout.pack, structs)
-        assert buf_struct.shape == (1, wire) and buf_struct.dtype == jnp.uint8
-        # concrete round-trip + timing
+    def _roundtrip(layout):
+        """Concrete pack/unpack round-trip + wall-clock timings."""
         payloads = _synth_payloads(layout)
         pack = jax.jit(layout.pack)
         unpack = jax.jit(layout.unpack)
@@ -97,15 +92,54 @@ def run(fast: bool = False):
             np.array_equal(np.asarray(a), np.asarray(b))
             for pa, pb in zip(payloads, back)
             for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)))
+        return bool(exact), t_pack, t_unpack
+
+    for name in comps:
+        opt = EF21Muon(EF21MuonConfig(n_workers=1, w2s=name, s2w=name,
+                                      wire_dtype=wire_dt))
+        plan = opt.plan(shapes, metas)
+        layout = plan.wire_layout(wire_dt)
+        s2w_layout = plan.wire_layout(wire_dt, direction="s2w")
+        dense = plan.dense_bytes(wire_dt)
+        analytic = plan.w2s_bytes_per_worker(wire_dt)
+        s2w_analytic = plan.s2w_bytes_per_round(wire_dt)
+        wire = layout.total_nbytes
+        s2w_wire = s2w_layout.total_nbytes
+        # the buffers the step would gather/broadcast are exactly the
+        # layout byte counts, in both directions
+        structs = layout.payload_structs(n_workers=1)
+        buf_struct = jax.eval_shape(layout.pack, structs)
+        assert buf_struct.shape == (1, wire) and buf_struct.dtype == jnp.uint8
+        s_struct = jax.eval_shape(s2w_layout.pack,
+                                  s2w_layout.payload_structs(n_workers=1))
+        assert s_struct.shape == (1, s2w_wire) \
+            and s_struct.dtype == jnp.uint8
+        exact, t_pack, t_unpack = _roundtrip(layout)
+        s2w_exact, _, _ = _roundtrip(s2w_layout)
         rows.append({
-            "bench": "wire", "arch": cfg.name, "w2s": name, "wire": "bf16",
+            "bench": "wire", "arch": cfg.name, "w2s": name, "s2w": name,
+            "wire": "bf16",
             "dense_bytes": dense, "analytic_bytes": analytic,
             "wire_bytes": wire,
+            "s2w_analytic_bytes": s2w_analytic,
+            "s2w_wire_bytes": s2w_wire,
+            "two_way_analytic_bytes": analytic + s2w_analytic,
+            "two_way_wire_bytes": wire + s2w_wire,
             "wire_vs_analytic": round(wire / analytic, 4),
+            "s2w_vs_analytic": round(s2w_wire / s2w_analytic, 4),
+            "two_way_vs_analytic": round(
+                (wire + s2w_wire) / (analytic + s2w_analytic), 4),
             "wire_vs_dense": round(wire / dense, 4),
             "analytic_vs_dense": round(analytic / dense, 4),
             "roundtrip_exact": bool(exact),
+            "s2w_roundtrip_exact": bool(s2w_exact),
             "pack_s": round(t_pack, 4), "unpack_s": round(t_unpack, 4)})
+    # the CI bounds live here so every harness enforces them
+    for r in rows:
+        assert r["roundtrip_exact"] and r["s2w_roundtrip_exact"], r
+        assert r["wire_vs_analytic"] <= 1.15, r
+        assert r["s2w_vs_analytic"] <= 1.15, r
+        assert r["two_way_vs_analytic"] <= 1.15, r
     return rows
 
 
@@ -117,8 +151,6 @@ def main():
     rows = run(fast=args.fast)
     for r in rows:
         print(json.dumps(r), flush=True)
-        assert r["roundtrip_exact"], r
-        assert r["wire_vs_analytic"] <= 1.15, r
     with open(args.out, "w") as f:
         json.dump({"bench": "wire_bytes", "rows": rows}, f, indent=2)
     print(f"wrote {args.out}")

@@ -38,8 +38,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.layerwise import LayerPlan, dense_payload_bytes, vmap_n
+from repro.dist.pipeline import s2w_issue_order
 
-from .error_feedback import ef_compress_step
+from .error_feedback import apply_payload, ef_compress_step
 from .lmo import default_radius_scale, lmo_direction, lmo_direction_batched
 
 
@@ -82,6 +83,11 @@ class EF21MuonConfig:
                                    # stage per NS bucket + the eager chunk;
                                    # 1 = the monolithic single-gather path
                                    # (bit-identical A/B arm); N caps stages
+    wire_pack_s2w: Any = "auto"    # pack the EF21-P server->worker model
+                                   # update through the s2w wire leg (§9):
+                                   # "auto" follows wire_pack; False keeps
+                                   # the unpacked phase-1 path (the value-
+                                   # bit-equal A/B arm); True forces it
 
 
 def _unzip(pairs: list, n: int) -> tuple[list, ...]:
@@ -168,6 +174,18 @@ class EF21Muon:
         return self.plan(params, metas).wire_layout(
             self.cfg.wire_dtype).total_nbytes
 
+    def s2w_bytes_per_round(self, params: Any, metas: Any) -> int:
+        """Static wire cost of one server->worker model-update broadcast
+        (Table-2 convention, EF21-P direction)."""
+        return self.plan(params, metas).s2w_bytes_per_round(
+            self.cfg.wire_dtype)
+
+    def wire_bytes_s2w(self, params: Any, metas: Any) -> int:
+        """Exact bytes of the fused s2w uint8 broadcast buffer (§9) —
+        what the model-update broadcast actually moves per round."""
+        return self.plan(params, metas).wire_layout(
+            self.cfg.wire_dtype, direction="s2w").total_nbytes
+
     def dense_bytes(self, params: Any) -> int:
         return dense_payload_bytes(
             (p.shape for p in jax.tree.leaves(params)), self.cfg.wire_dtype)
@@ -177,11 +195,21 @@ class EF21Muon:
     def make_step(self, metas: Any,
                   reshard_payloads: Callable | None = None,
                   donate: bool = False, mesh=None,
-                  fsdp: bool = False) -> Callable:
+                  fsdp: bool = False,
+                  reshard_updates: Callable | None = None) -> Callable:
         """``reshard_payloads`` is the cross-worker communication hook
         (the trainer's worker-axis all-gather). None means single-process
         — there is no collective to fuse, so the wire pack/unpack is
         skipped entirely (it is a values-identity either way).
+
+        ``reshard_updates`` is the same hook for the opposite direction
+        (§9): the tiled ``[n_workers, nbytes]`` s2w broadcast buffer —
+        every worker-domain's copy of the server's compressed model
+        update — is pinned to the worker axis and re-replicated, which
+        lowers to one u8 all-gather per stage sub-buffer whose
+        per-device operand bytes are exactly the s2w layout account
+        (the per-link cost of a broadcast). Defaults to
+        ``reshard_payloads``; pass one explicitly to split the hooks.
 
         ``mesh``/``fsdp`` make the bucketed phase-5 dispatch
         sharding-aware: each NS bucket carries its ``ns_bucket_pspec``
@@ -191,15 +219,99 @@ class EF21Muon:
         concat. Single-process callers leave them unset."""
         cfg = self.cfg
         pack_wire = cfg.wire_pack and reshard_payloads is not None
+        if reshard_updates is None:
+            reshard_updates = reshard_payloads
+        pack_s2w = (cfg.s2w != "identity"
+                    and reshard_updates is not None
+                    and (cfg.wire_pack if cfg.wire_pack_s2w == "auto"
+                         else bool(cfg.wire_pack_s2w)))
         if reshard_payloads is None:
             reshard_payloads = lambda tree: tree
+        if reshard_updates is None:
+            reshard_updates = lambda tree: tree
 
         def step(state: dict, grad_and_loss: Callable, batch: Any,
                  t: jax.Array | float) -> tuple[dict, dict]:
             plan = self.plan(state["x"], metas)
 
-            # ---- 1. EF21-P: workers' model estimate W (S = C_P(X - W))
-            if cfg.s2w != "identity":
+            # Stage structure first — both wire directions cut their
+            # buffers along the same leaf partition (§8, §9).
+            buckets = (plan.ns_buckets(mesh=mesh, fsdp=fsdp)
+                       if cfg.ns_bucketing else ())
+            bucketed = {i for b in buckets for i in b.leaf_ids}
+            splan = None
+            if (pack_wire or pack_s2w) and cfg.ns_bucketing \
+                    and cfg.wire_stages != 1:
+                sp = plan.stage_plan(mesh=mesh, fsdp=fsdp,
+                                     wire_stages=cfg.wire_stages,
+                                     ns_steps=cfg.ns_steps)
+                if sp.n_stages > 1:
+                    splan = sp
+
+            # ---- 1. EF21-P: workers' model estimate W (S = C_P(X - W)).
+            # With s2w wire packing the broadcast leg is explicit (§9):
+            # the server packs S into the s2w uint8 wire buffer, tiles
+            # it to [n_workers, nbytes] (each row one worker-domain's
+            # copy of the same message) and the reshard_updates hook
+            # pins it to the worker axis then re-replicates — one u8
+            # all-gather per stage sub-buffer whose per-device operand
+            # is exactly the s2w layout bytes, i.e. the per-link cost
+            # of the broadcast. W is then reconstructed from the *wire
+            # bytes* via apply_payload, so server and workers advance
+            # bit-identical EF21-P state; the unpacked arm
+            # (wire_pack_s2w=False) is value-bit-equal because
+            # pack -> unpack is bit-exact and apply_payload is the
+            # same estimate update ef_compress_step performs.
+            if cfg.s2w != "identity" and pack_s2w:
+                cs_f = plan.flatten(state["cs_state"])
+                w_f = plan.flatten(state["w"])
+                x_f0 = plan.flatten(state["x"])
+                s_payloads, cs_l = _unzip(plan.map_flat(
+                    lambda lp, cs, w, x: ef_compress_step(
+                        lp.s2w, cs, w, x, cfg.wire_dtype)[:2],
+                    cs_f, w_f, x_f0), 2)
+                # lead dim 1: the server's single broadcast message
+                lead = [jax.tree.map(lambda a: a[None], p)
+                        for p in s_payloads]
+
+                def broadcast(buf):
+                    # The max-fold over the gathered (bit-identical u8)
+                    # rows is a value identity that consumes EVERY row,
+                    # so the partitioner cannot shrink or elide the
+                    # gather behind the invariant.
+                    tiled = jnp.broadcast_to(
+                        buf, (cfg.n_workers,) + tuple(buf.shape[1:]))
+                    return jnp.max(reshard_updates(tiled),
+                                   axis=0, keepdims=True)
+
+                def s2w_apply(i, pl):
+                    lp = plan.leaves[i]
+                    return vmap_n(
+                        lambda q, w: apply_payload(lp.s2w, q, w),
+                        lp.meta.stack_dims)(
+                            jax.tree.map(lambda a: a[0], pl), w_f[i])
+
+                w_l: list = [None] * len(plan.leaves)
+                if splan is not None:
+                    swire = plan.staged_wire_layout(
+                        cfg.wire_dtype, splan, direction="s2w")
+                    order = s2w_issue_order(plan, splan)
+                    # all K broadcasts issued up front, heaviest
+                    # receive chain first (§9 overlap story)
+                    sbufs = {k: broadcast(swire.pack_stage(k, lead))
+                             for k in order}
+                    for k in order:
+                        for i, pl in zip(splan.stages[k].leaf_ids,
+                                         swire.unpack_stage(k, sbufs[k])):
+                            w_l[i] = s2w_apply(i, pl)
+                else:
+                    swire = plan.wire_layout(cfg.wire_dtype,
+                                             direction="s2w")
+                    buf = broadcast(swire.pack(lead))
+                    for i, pl in enumerate(swire.unpack(buf)):
+                        w_l[i] = s2w_apply(i, pl)
+                w_tree, cs_tree = plan.unflatten(w_l), plan.unflatten(cs_l)
+            elif cfg.s2w != "identity":
                 cs_l, w_l = _unzip(plan.map_flat(
                     lambda lp, cs, w, x: ef_compress_step(
                         lp.s2w, cs, w, x, cfg.wire_dtype)[1:],
@@ -278,20 +390,9 @@ class EF21Muon:
                 for i, piece in zip(b.leaf_ids, b.unstack(x_b, mesh=mesh)):
                     x_l[i] = piece.astype(x_flat[i].dtype)
 
-            buckets = (plan.ns_buckets(mesh=mesh, fsdp=fsdp)
-                       if cfg.ns_bucketing else ())
-            bucketed = {i for b in buckets for i in b.leaf_ids}
-            splan = None
-            if pack_wire and cfg.ns_bucketing and cfg.wire_stages != 1:
-                sp = plan.stage_plan(mesh=mesh, fsdp=fsdp,
-                                     wire_stages=cfg.wire_stages,
-                                     ns_steps=cfg.ns_steps)
-                if sp.n_stages > 1:
-                    splan = sp
-
             gsrv_l = plan.flatten(state["g_server"])
             x_flat = plan.flatten(state["x"])
-            if splan is not None:
+            if pack_wire and splan is not None:
                 # ---- staged wire pipeline (DESIGN.md §8): the §6 buffer
                 # repartitioned into K stage sub-buffers aligned with the
                 # NS buckets that consume them. All K gathers are issued

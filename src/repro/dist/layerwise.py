@@ -73,10 +73,11 @@ class LayerPlan:
     def __init__(self, treedef, leaves: list[LeafPlan]):
         self.treedef = treedef
         self.leaves = leaves
-        self._wire_layouts: dict = {}   # wire-dtype name -> WireLayout
+        self._wire_layouts: dict = {}   # (dtype name, direction) -> WireLayout
         self._ns_buckets: dict = {}     # (mesh key, fsdp) -> tuple[NSBucket]
         self._stage_plans: dict = {}    # (mesh key, fsdp, stages) -> StagePlan
-        self._staged_layouts: dict = {}  # (dtype, stage ids) -> StagedWireLayout
+        self._staged_layouts: dict = {}  # (dtype, stage ids, direction)
+        #                                  -> StagedWireLayout
 
     @classmethod
     def build(cls, params: Any, metas: Any, w2s: str = "identity",
@@ -134,6 +135,14 @@ class LayerPlan:
         return sum(lp.n_stack * lp.w2s.payload_bytes(lp.slice_shape, wire_dtype)
                    for lp in self.leaves)
 
+    def s2w_bytes_per_round(self, wire_dtype) -> int:
+        """Static bytes of one server->worker model-update broadcast
+        (the EF21-P / C_P direction, same Table-2 accounting convention
+        as ``w2s_bytes_per_worker``). One message per round — the
+        server broadcasts a single compressed S = C_P(X - W)."""
+        return sum(lp.n_stack * lp.s2w.payload_bytes(lp.slice_shape, wire_dtype)
+                   for lp in self.leaves)
+
     def dense_bytes(self, wire_dtype) -> int:
         """Uncompressed wire cost of the same message."""
         return dense_payload_bytes((lp.shape for lp in self.leaves),
@@ -175,31 +184,38 @@ class LayerPlan:
                 wire_stages=wire_stages, ns_steps=ns_steps)
         return self._stage_plans[key]
 
-    def staged_wire_layout(self, wire_dtype, stage_plan):
+    def staged_wire_layout(self, wire_dtype, stage_plan,
+                           direction: str = "w2s"):
         """The ``StagedWireLayout`` repartitioning ``wire_layout`` along
-        ``stage_plan`` — memoised per (wire dtype, stage partition)."""
+        ``stage_plan`` — memoised per (wire dtype, stage partition,
+        direction). Both directions reuse the *same* leaf partition, so
+        the s2w broadcasts pair 1:1 with the w2s gathers per stage."""
         from repro.wire.layout import build_staged_layout
 
         ids = tuple(s.leaf_ids for s in stage_plan.stages)
-        key = (jnp.dtype(wire_dtype).name, ids)
+        key = (jnp.dtype(wire_dtype).name, ids, direction)
         if key not in self._staged_layouts:
             self._staged_layouts[key] = build_staged_layout(
-                self.wire_layout(wire_dtype), ids)
+                self.wire_layout(wire_dtype, direction=direction), ids)
         return self._staged_layouts[key]
 
-    def wire_layout(self, wire_dtype):
-        """The static WireLayout (repro.wire) for this plan: the offset
-        table of the fused per-worker payload buffer, memoised per wire
-        dtype. ``wire_layout(d).total_nbytes`` is the *exact* byte count
-        the payload all-gather moves — compare with the analytic Table-2
-        ``w2s_bytes_per_worker`` (which keeps the paper's 4-byte-index
+    def wire_layout(self, wire_dtype, direction: str = "w2s"):
+        """The static WireLayout (repro.wire) for this plan and
+        direction, memoised per (wire dtype, direction): the offset
+        table of the fused per-worker payload buffer (``"w2s"``) or of
+        the server's model-update broadcast message (``"s2w"``, §9).
+        ``wire_layout(d, dir).total_nbytes`` is the *exact* byte count
+        that direction's u8 collective moves — compare with the
+        analytic Table-2 ``w2s_bytes_per_worker`` /
+        ``s2w_bytes_per_round`` (which keep the paper's 4-byte-index
         convention)."""
         # Deferred import: repro.wire.layout imports this module.
         from repro.wire.layout import build_layout
 
-        key = jnp.dtype(wire_dtype).name
+        key = (jnp.dtype(wire_dtype).name, direction)
         if key not in self._wire_layouts:
-            self._wire_layouts[key] = build_layout(self, wire_dtype)
+            self._wire_layouts[key] = build_layout(self, wire_dtype,
+                                                   direction=direction)
         return self._wire_layouts[key]
 
 

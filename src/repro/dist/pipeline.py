@@ -23,9 +23,18 @@ sub-buffers of ``wire.layout.StagedWireLayout`` sum byte-for-byte to
 ``WireLayout.total_nbytes`` and every leaf keeps its codec byte-layout,
 so pack -> unpack stays bit-exact per stage and the staged step is
 value-bit-equal to the monolithic one on the jnp path.
+
+The s2w direction (DESIGN.md §9) reuses the SAME leaf partition: the
+server's model-update broadcast is cut into the identical K stage
+sub-buffers (built from the ``lp.s2w`` codecs), so each stage's w2s
+gather and s2w broadcast pair up 1:1 and the two-direction byte
+invariant stays a per-stage statement. Only the *issue order* differs —
+``s2w_issue_order`` ranks stages by decompress/apply work (the compute
+that consumes the broadcast) rather than NS FLOPs.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 
@@ -104,3 +113,23 @@ def build_stage_plan(plan, buckets, wire_stages="auto",
             ns_flops=sum(s.ns_flops for s in tail))
         stages = head + [merged]
     return StagePlan(stages=tuple(stages), eager_leaf_ids=eager)
+
+
+def s2w_issue_order(plan, stage_plan: StagePlan) -> tuple[int, ...]:
+    """Issue order of the K s2w broadcast sub-buffers (DESIGN.md §9).
+
+    The s2w leg reuses ``stage_plan``'s leaf partition, but the compute
+    that hides a broadcast is its *receive* chain — per-leaf decompress
+    + apply_payload, proportional to leaf elements — not the NS FLOPs
+    that ordered the w2s stages. Broadcasts are issued descending by
+    that receive work, so the heaviest reconstruction overlaps the
+    still-in-flight broadcasts of the later stages. Deterministic (ties
+    break on stage index); always a permutation of ``range(n_stages)``.
+    """
+    def receive_work(stage: WireStage) -> float:
+        return float(sum(math.prod(plan.leaves[i].shape)
+                         for i in stage.leaf_ids))
+
+    return tuple(sorted(
+        range(stage_plan.n_stages),
+        key=lambda k: (-receive_work(stage_plan.stages[k]), k)))

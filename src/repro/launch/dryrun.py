@@ -34,7 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.dist import (batch_pspec, n_workers_for, param_pspecs,
                         serve_pspecs, to_shardings)
-from repro.launch.hlo_analysis import overlap_roofline_terms
+from repro.launch.hlo_analysis import (attribute_u8_directions,
+                                       overlap_roofline_terms)
 from repro.launch.hlo_cost import analyze, cost_analysis_dict
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import abstract_params as _abstract_params
@@ -98,7 +99,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                fsdp: bool | None = None, beta: float = 0.1,
                s2w: str = "identity", pad_heads: int | None = None,
                zero1_lmo: bool = False, wire_pack: bool = True,
-               ns_bucketing: bool = True, wire_stages="auto"):
+               ns_bucketing: bool = True, wire_stages="auto",
+               wire_pack_s2w="auto"):
     """Lower + compile one (arch, shape, mesh). Returns the record dict."""
     import dataclasses
     cfg = get_config(arch)
@@ -125,13 +127,16 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                fsdp=use_fsdp)
 
     t0 = time.time()
+    w2s_stage_sizes: list = []
+    s2w_stage_sizes: list = []
     if shape.kind == "train":
         n_w = n_workers_for(mesh)
         tr = Trainer(model, TrainerConfig(
             n_workers=n_w, beta=beta, w2s=w2s, s2w=s2w, fsdp=use_fsdp,
             use_pallas=False, zero1_lmo=zero1_lmo,
             wire_pack=wire_pack, ns_bucketing=ns_bucketing,
-            wire_stages=wire_stages), mesh=mesh)
+            wire_stages=wire_stages, wire_pack_s2w=wire_pack_s2w),
+            mesh=mesh)
         # wire accounting: analytic Table-2 bytes vs the exact bytes the
         # fused payload buffer moves (compare with the measured
         # u8_coll_bytes parsed from the compiled HLO below; that
@@ -140,9 +145,48 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         # leaves, a lower bound on the unpacked payload traffic)
         plan = tr.layer_plan()
         wire_dt = tr.opt.cfg.wire_dtype
-        rec.update(w2s_bytes_analytic=plan.w2s_bytes_per_worker(wire_dt),
-                   w2s_bytes_wire=plan.wire_layout(wire_dt).total_nbytes,
-                   wire_pack=wire_pack, ns_bucketing=ns_bucketing,
+        # s2w leg (§9): analytic + exact wire bytes of the model-update
+        # broadcast, plus the resolved pack switch the compiled step
+        # actually uses
+        pack_s2w = (s2w != "identity"
+                    and (wire_pack if wire_pack_s2w == "auto"
+                         else bool(wire_pack_s2w)))
+        s2w_analytic = (plan.s2w_bytes_per_round(wire_dt)
+                        if s2w != "identity" else 0)
+        s2w_wire = (plan.wire_layout(wire_dt,
+                                     direction="s2w").total_nbytes
+                    if pack_s2w else 0)
+        splan = (plan.stage_plan(mesh=mesh, fsdp=use_fsdp,
+                                 wire_stages=wire_stages)
+                 if (wire_pack or pack_s2w) and ns_bucketing
+                 and wire_stages != 1 else None)
+        if splan is not None and splan.n_stages <= 1:
+            splan = None
+
+        def _stage_sizes(direction: str, packed: bool) -> list[int]:
+            """Expected per-collective u8 byte counts for attribution:
+            one entry per stage sub-buffer (monolithic => one entry)."""
+            if not packed:
+                return []
+            if splan is not None:
+                sw = plan.staged_wire_layout(wire_dt, splan,
+                                             direction=direction)
+                return [sw.stage_nbytes(k) for k in range(sw.n_stages)]
+            return [plan.wire_layout(wire_dt,
+                                     direction=direction).total_nbytes]
+
+        w2s_stage_sizes = _stage_sizes("w2s", wire_pack)
+        s2w_stage_sizes = _stage_sizes("s2w", pack_s2w)
+        w2s_analytic = plan.w2s_bytes_per_worker(wire_dt)
+        w2s_wire = plan.wire_layout(wire_dt).total_nbytes
+        rec.update(w2s_bytes_analytic=w2s_analytic,
+                   w2s_bytes_wire=w2s_wire,
+                   s2w_bytes_analytic=s2w_analytic,
+                   wire_bytes_s2w=s2w_wire,
+                   wire_pack=wire_pack, wire_pack_s2w=wire_pack_s2w,
+                   two_way_bytes_analytic=w2s_analytic + s2w_analytic,
+                   two_way_bytes_wire=w2s_wire + s2w_wire,
+                   ns_bucketing=ns_bucketing,
                    # the mesh-aware bucket count — what the compiled step
                    # actually dispatches (TP-orientation sub-splits
                    # included), not the mesh-less grouping
@@ -151,11 +195,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                    wire_stages=wire_stages,
                    # effective pipeline stage count (§8); 1 when the
                    # staged path collapses to the monolithic gather
-                   n_wire_stages=(plan.stage_plan(
-                       mesh=mesh, fsdp=use_fsdp,
-                       wire_stages=wire_stages).n_stages
-                       if wire_pack and ns_bucketing and wire_stages != 1
-                       else 1))
+                   n_wire_stages=(splan.n_stages if splan is not None
+                                  else 1))
         batch = input_specs(cfg, shape, n_workers=n_w)
         state = tr.state_shapes()
         jitted = tr.jit_step(batch)
@@ -202,6 +243,29 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     terms = overlap_roofline_terms(flops, bytes_acc, cost["coll_bytes"],
                                    cost["coll_pairs"])
     u8_pairs = [p for p in cost["coll_pairs"] if p["u8"]]
+    if w2s_stage_sizes or s2w_stage_sizes:
+        # per-direction u8 attribution (§9): the wire collectives are
+        # the u8 all-gathers — every one must match an expected stage
+        # sub-buffer size, so the measured two-way split is exact
+        # whenever unmatched/missing are empty. Non-gather u8 traffic
+        # (the partitioner's masked-DUS + all-reduce assembly of the
+        # TP-sharded s2w pack buffer, see tests/test_sharding.py) is
+        # reported separately as repack bytes.
+        split = attribute_u8_directions(
+            [p for p in u8_pairs if p["kind"] == "all-gather"],
+            w2s_stage_sizes, s2w_stage_sizes)
+        rec.update(
+            u8_bytes_w2s=split["w2s"]["bytes"],
+            u8_count_w2s=split["w2s"]["count"],
+            u8_bytes_s2w=split["s2w"]["bytes"],
+            u8_count_s2w=split["s2w"]["count"],
+            u8_unmatched_bytes=sum(split["unmatched_bytes"]),
+            u8_missing=split["missing"],
+            u8_repack_bytes=int(sum(p["count"] * p["bytes"]
+                                    for p in u8_pairs
+                                    if p["kind"] != "all-gather")),
+            two_way_bytes_measured=(split["w2s"]["bytes"]
+                                    + split["s2w"]["bytes"]))
     rec.update(
         u8_pair_overlap_flops=sum(p["count"] * p["overlap_flops"]
                                   for p in u8_pairs),
@@ -298,6 +362,10 @@ def main():
     ap.add_argument("--no-wire-pack", action="store_true",
                     help="ship the unpacked payload pytree (per-leaf "
                          "collectives) instead of the fused wire buffer")
+    ap.add_argument("--no-wire-pack-s2w", action="store_true",
+                    help="keep the unpacked EF21-P phase-1 path (the "
+                         "value-bit-equal A/B arm) instead of the s2w "
+                         "wire broadcast (§9)")
     ap.add_argument("--no-ns-bucketing", action="store_true",
                     help="per-leaf Newton-Schulz chains instead of the "
                          "shape-bucketed batched dispatch (DESIGN.md §7)")
@@ -349,7 +417,9 @@ def main():
                       f"(w2s={args.w2s}, tag={tag})", flush=True)
                 kw = dict(w2s=args.w2s, fsdp=fsdp, s2w=args.s2w,
                           pad_heads=args.pad_heads, zero1_lmo=args.zero1,
-                          wire_pack=not args.no_wire_pack)
+                          wire_pack=not args.no_wire_pack,
+                          wire_pack_s2w=(False if args.no_wire_pack_s2w
+                                         else "auto"))
                 try:
                     if args.ns_ab:
                         recs = list(ns_ab_pair(arch, shape, mesh == "multi",
@@ -387,6 +457,13 @@ def main():
                               "t_exposed_collective_s", "n_wire_stages",
                               "ns_flops_ratio", "exposed_collective_ratio",
                               "reason", "error")}
+                    if rec.get("status") == "ok" \
+                            and "w2s_bytes_wire" in rec:
+                        # both wire directions + the two-way total (§9)
+                        brief.update({k: rec.get(k) for k in
+                                      ("w2s_bytes_wire", "wire_bytes_s2w",
+                                       "two_way_bytes_wire",
+                                       "two_way_bytes_measured")})
                     print(f"   -> {brief}", flush=True)
 
 

@@ -82,6 +82,48 @@ def collective_bytes(hlo_text: str) -> dict:
             "by_kind": dict(by_kind), "count": count}
 
 
+def attribute_u8_directions(coll_pairs: list, w2s_sizes, s2w_sizes) -> dict:
+    """Attribute uint8 collective pair records to wire directions
+    (DESIGN.md §9) by byte-matching against the two directions' static
+    stage sub-buffer sizes.
+
+    Both wire legs lower to u8 all-gathers whose per-device operand
+    bytes equal their stage sub-buffer exactly (the byte-for-byte
+    invariant), so the multiset of expected sizes identifies each
+    collective: ``w2s_sizes`` / ``s2w_sizes`` are the per-stage byte
+    counts (one entry per expected collective; repeat entries for
+    repeated sizes). A byte count both directions expect is resolved by
+    remaining quota — each expected entry is consumed at most once, so
+    counts stay exact even on collisions. Returns per-direction
+    measured ``{"bytes", "count"}`` plus ``unmatched_bytes`` (u8 pairs
+    no direction expected) and ``missing`` (expected sizes never seen)
+    — both empty iff the two-direction invariant holds."""
+    expected = {"w2s": defaultdict(int), "s2w": defaultdict(int)}
+    for s in w2s_sizes:
+        expected["w2s"][int(s)] += 1
+    for s in s2w_sizes:
+        expected["s2w"][int(s)] += 1
+    out = {d: {"bytes": 0, "count": 0} for d in ("w2s", "s2w")}
+    unmatched = []
+    for p in coll_pairs:
+        if not p.get("u8"):
+            continue
+        b = int(p["bytes"])
+        for _ in range(max(int(round(p.get("count", 1.0))), 0)):
+            d = next((d for d in ("w2s", "s2w") if expected[d][b] > 0),
+                     None)
+            if d is None:
+                unmatched.append(b)
+            else:
+                expected[d][b] -= 1
+                out[d]["bytes"] += b
+                out[d]["count"] += 1
+    missing = {d: sorted(sz for sz, n in exp.items() for _ in range(n))
+               for d, exp in expected.items() if sum(exp.values())}
+    return {"w2s": out["w2s"], "s2w": out["s2w"],
+            "unmatched_bytes": sorted(unmatched), "missing": missing}
+
+
 def roofline_terms(flops: float, bytes_accessed: float,
                    coll_bytes: float, *, peak_flops: float = 197e12,
                    hbm_bw: float = 819e9, ici_bw: float = 50e9) -> dict:

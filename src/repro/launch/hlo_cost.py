@@ -283,8 +283,10 @@ class Cost:
     coll_bytes: float = 0.0
     coll_by_kind: dict = field(default_factory=dict)
     # one record per collective (pair accounting, module docstring):
-    # {kind, bytes, u8, overlap_flops, count} — count scales with the
-    # enclosing while trip counts, bytes/flops stay per occurrence.
+    # {kind, bytes, u8, overlap_flops, count, name} — count scales with
+    # the enclosing while trip counts, bytes/flops stay per occurrence;
+    # name is the HLO instruction (for per-direction attribution and
+    # debugging, see hlo_analysis.attribute_u8_directions).
     pairs: list = field(default_factory=list)
     # uint8 collective operands, tracked separately. With wire packing
     # on (the default) this is exactly the fused repro.wire payload
@@ -388,7 +390,8 @@ def _pairs_for_comp(comp: Computation, instr_flops) -> list[dict]:
             flops = sum(fl[k] for k in range(n)
                         if k != i and k not in anc and k not in desc)
         pairs.append({"kind": kind, "bytes": float(b), "u8": bool(u8),
-                      "overlap_flops": float(flops), "count": 1.0})
+                      "overlap_flops": float(flops), "count": 1.0,
+                      "name": ins.name})
     return pairs
 
 

@@ -59,16 +59,24 @@ def main():
         print(f"resumed from {args.resume} @ step {start}")
     step_fn = jax.jit(tr.make_step())
     sched = warmup_linear_decay(args.radius, args.warmup, args.steps)
-    # wire accounting straight from the LayerPlan (Table 2 source of truth)
+    # wire accounting straight from the LayerPlan (Table 2 source of
+    # truth) — both directions plus the two-way total (§9)
     plan = tr.layer_plan()
-    wire = plan.w2s_bytes_per_worker(tr.opt.cfg.wire_dtype)
-    dense = plan.dense_bytes(tr.opt.cfg.wire_dtype)
-    buf = plan.wire_layout(tr.opt.cfg.wire_dtype).total_nbytes
+    dt = tr.opt.cfg.wire_dtype
+    wire = plan.w2s_bytes_per_worker(dt)
+    dense = plan.dense_bytes(dt)
+    buf = plan.wire_layout(dt).total_nbytes
+    s2w_wire = (plan.s2w_bytes_per_round(dt)
+                if args.s2w != "identity" else 0)
+    s2w_buf = (plan.wire_layout(dt, direction="s2w").total_nbytes
+               if args.s2w != "identity" else 0)
     stages = plan.stage_plan(wire_stages=tr.opt.cfg.wire_stages).n_stages
     print(f"arch={cfg.name} params="
           f"{sum(p.size for p in jax.tree.leaves(state['x']))} "
           f"w2s_bytes/worker={wire} ({wire / dense:.3f} of dense) "
           f"wire_buffer={buf} ({buf / dense:.3f} of dense) "
+          f"s2w_bytes/round={s2w_wire} s2w_wire_buffer={s2w_buf} "
+          f"two_way_wire={buf + s2w_buf} "
           f"wire_stages={stages}")
     t0 = time.time()
     for i in range(start, args.steps):

@@ -7,7 +7,9 @@ of *compressed payloads only* across the worker axis.
 
 The dataflow per step (DESIGN.md §5):
 
-  1. (EF21-P, replicated server) S = C_P(X - W); W += S
+  1. (EF21-P) S = C_P(X - W) on the server; S rides the s2w wire leg
+     (packed u8 buffer, broadcast over the worker axis, §9) and both
+     ends advance W from the same wire bytes: W += unpack(S)
   2. per-worker grads at W via vmap(grad, in_axes=(None, 0))  — no
      cross-worker collectives are induced: worker computations are
      independent by construction.
@@ -54,6 +56,9 @@ class TrainerConfig:
     wire_stages: Any = "auto"  # staged wire pipeline (§8): "auto" = one
                                # stage per NS bucket + eager chunk; 1 =
                                # the monolithic single-gather A/B arm
+    wire_pack_s2w: Any = "auto"  # s2w wire leg (§9): pack the EF21-P
+                                 # model-update broadcast; "auto" follows
+                                 # wire_pack, False = unpacked A/B arm
 
 
 class Trainer:
@@ -65,7 +70,8 @@ class Trainer:
             n_workers=tcfg.n_workers, beta=tcfg.beta, w2s=tcfg.w2s,
             s2w=tcfg.s2w, ns_steps=tcfg.ns_steps,
             use_pallas=tcfg.use_pallas, wire_pack=tcfg.wire_pack,
-            ns_bucketing=tcfg.ns_bucketing, wire_stages=tcfg.wire_stages))
+            ns_bucketing=tcfg.ns_bucketing, wire_stages=tcfg.wire_stages,
+            wire_pack_s2w=tcfg.wire_pack_s2w))
         # metas are static: build once from the model's abstract init
         from repro.models.api import abstract_params
         self._params_shapes, self.metas = abstract_params(model)
@@ -129,14 +135,29 @@ class Trainer:
                     return jax.lax.with_sharding_constraint(x, replicated)
 
                 return jax.tree.map(one, payloads)
+
+            def broadcast_updates(bufs):
+                # s2w communication (DESIGN.md §9): the optimizer hands
+                # over the tiled [n_workers, nbytes] uint8 model-update
+                # buffer — every worker-domain's copy of the server's
+                # single compressed message. Pinning to the worker axis
+                # then replicating lowers to ONE u8 all-gather per
+                # stage sub-buffer whose per-device operand bytes are
+                # exactly the s2w WireLayout account: the per-link cost
+                # of the broadcast, measured by the same collective the
+                # w2s leg uses, so the SPMD byte invariant becomes a
+                # two-direction statement.
+                return reshard(bufs)
         else:
-            reshard = None   # single-process: no collective, no wire pack
+            reshard = None            # single-process: no collective,
+            broadcast_updates = None  # no wire pack in either direction
 
         # mesh/fsdp make the bucketed NS dispatch sharding-aware (the
         # bucket stacks carry their ns_bucket_pspec instead of dropping
         # the per-leaf TP/zero-1 shardings at the concat)
         opt_step = self.opt.make_step(self.metas, reshard_payloads=reshard,
-                                      mesh=self.mesh, fsdp=self.tcfg.fsdp)
+                                      mesh=self.mesh, fsdp=self.tcfg.fsdp,
+                                      reshard_updates=broadcast_updates)
 
         def step(state, batch, t):
             return opt_step(state, self._grad_and_loss, batch, t)

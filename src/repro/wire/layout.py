@@ -1,22 +1,25 @@
-"""Static wire layout: the whole per-worker w2s message as ONE uint8
-buffer with a precomputed offset table (DESIGN.md §6).
+"""Static wire layout: the whole per-direction message as ONE uint8
+buffer with a precomputed offset table (DESIGN.md §6, §9).
 
-Built once per (LayerPlan, wire dtype) — the payload structure of every
-leaf is derived abstractly (``jax.eval_shape`` over the resolved
-compressor's ``init``/``compress``), so construction allocates nothing
-and is safe inside a traced step.
+Built once per (LayerPlan, wire dtype, direction) — the payload
+structure of every leaf is derived abstractly (``jax.eval_shape`` over
+the resolved compressor's ``init``/``compress``), so construction
+allocates nothing and is safe inside a traced step.
 
-Buffer layout, per worker:
+Buffer layout, per message:
 
     [ leaf 0: stack slice 0 | stack slice 1 | ... ][ leaf 1: ... ] ...
 
 Each slice region is the concatenation of that compressor's payload
 leaves, each encoded by its codec (see ``codecs.py``).  ``pack`` maps
-codecs over the worker + stack dims with the same ``vmap_n`` discipline
-as every other optimizer phase, producing a ``[n_workers, total_nbytes]``
-buffer; replicating that buffer over the worker mesh axis is the single
-fused payload all-gather of the step.  ``unpack`` is the bit-exact
-inverse, so the EF21 sender/receiver invariant survives the wire.
+codecs over the lead + stack dims with the same ``vmap_n`` discipline
+as every other optimizer phase, producing a ``[lead, total_nbytes]``
+buffer.  The lead dim is the message multiplicity: ``n_workers``
+independent messages for the w2s direction (replicating that buffer
+over the worker mesh axis is the fused payload all-gather of the
+step), and ``1`` for the s2w direction (the server's single broadcast
+message, §9).  ``unpack`` is the bit-exact inverse, so the EF21/EF21-P
+sender/receiver invariant survives the wire in both directions.
 """
 from __future__ import annotations
 
@@ -76,13 +79,16 @@ class WireSpec:
 class WireLayout:
     """Offset table + pack/unpack for the full per-step message."""
     specs: tuple[WireSpec, ...]     # aligned with LayerPlan.leaves
-    total_nbytes: int               # exact bytes of one worker's message
+    total_nbytes: int               # exact bytes of one message
+    direction: str = "w2s"          # which compressor family laid it out
 
     # ------------------------------------------------------ message pack
     def pack(self, flat_payloads: list) -> jax.Array:
-        """Flat per-leaf payload list (leaves ``[n_workers, *stack, ...]``,
-        exactly as ``LayerPlan.map_flat(..., extra_vmap=1)`` produces
-        them) -> ``[n_workers, total_nbytes]`` uint8 buffer."""
+        """Flat per-leaf payload list (leaves ``[lead, *stack, ...]`` —
+        lead is ``n_workers`` for w2s, exactly as
+        ``LayerPlan.map_flat(..., extra_vmap=1)`` produces them, or 1
+        for the s2w broadcast message) -> ``[lead, total_nbytes]``
+        uint8 buffer."""
         parts = []
         for spec, payload in zip(self.specs, flat_payloads):
             packed = vmap_n(spec.pack_slice,
@@ -151,6 +157,10 @@ class StagedWireLayout:
     def total_nbytes(self) -> int:
         return self.base.total_nbytes
 
+    @property
+    def direction(self) -> str:
+        return self.base.direction
+
     def stage_nbytes(self, k: int) -> int:
         return self.stages[k].total_nbytes
 
@@ -186,19 +196,26 @@ def build_staged_layout(layout: WireLayout,
             spec = dataclasses.replace(layout.specs[i], offset=offset)
             offset += spec.region_nbytes
             specs.append(spec)
-        stages.append(WireLayout(specs=tuple(specs), total_nbytes=offset))
+        stages.append(WireLayout(specs=tuple(specs), total_nbytes=offset,
+                                 direction=layout.direction))
     assert sum(s.total_nbytes for s in stages) == layout.total_nbytes
     return StagedWireLayout(base=layout, stage_leaf_ids=stage_leaf_ids,
                             stages=tuple(stages))
 
 
-def build_layout(plan: Any, wire_dtype) -> WireLayout:
-    """The WireLayout for a LayerPlan — the static offset table the
-    fused payload all-gather is laid out by."""
+def build_layout(plan: Any, wire_dtype, direction: str = "w2s") -> WireLayout:
+    """The WireLayout for a LayerPlan and direction — the static offset
+    table the fused payload all-gather (w2s) or model-update broadcast
+    (s2w, §9) is laid out by. ``direction`` selects which resolved
+    compressor family (``lp.w2s`` / ``lp.s2w``) defines each leaf's
+    payload structure; the byte machinery is direction-agnostic."""
+    if direction not in ("w2s", "s2w"):
+        raise ValueError(f"direction must be 'w2s' or 's2w', got "
+                         f"{direction!r}")
     specs = []
     offset = 0
     for lp in plan.leaves:
-        comp = lp.w2s
+        comp = getattr(lp, direction)
         in_dtype = (jnp.float32 if getattr(comp, "lossless_wire", False)
                     else jnp.dtype(wire_dtype))
         struct = _payload_struct(comp, lp.slice_shape, in_dtype)
@@ -214,4 +231,5 @@ def build_layout(plan: Any, wire_dtype) -> WireLayout:
             n_stack=lp.n_stack, codec_id=cid, treedef=treedef,
             codecs=codecs, splits=tuple(splits)))
         offset += specs[-1].region_nbytes
-    return WireLayout(specs=tuple(specs), total_nbytes=offset)
+    return WireLayout(specs=tuple(specs), total_nbytes=offset,
+                      direction=direction)

@@ -220,6 +220,43 @@ def test_exposed_collective_terms_floor_and_unpaired():
     assert full["bottleneck_overlap"] == "collective"
 
 
+def test_attribute_u8_directions_quota_matching():
+    """Per-direction u8 attribution (§9): quota-based multiset matching
+    stays exact on size collisions between the two directions, scales
+    with pair counts, ignores non-u8 pairs, and reports unmatched /
+    missing multisets."""
+    from repro.launch.hlo_analysis import attribute_u8_directions
+
+    def pair(b, u8=True, count=1.0, kind="all-gather"):
+        return {"kind": kind, "bytes": float(b), "u8": u8,
+                "overlap_flops": 0.0, "count": count}
+
+    # clean two-direction case, with a size both directions expect (100):
+    # quota resolves the collision — one 100 to each direction
+    split = attribute_u8_directions(
+        [pair(100), pair(100), pair(30), pair(70), pair(50, u8=False)],
+        w2s_sizes=[100, 30], s2w_sizes=[100, 70])
+    assert split["w2s"] == {"bytes": 130, "count": 2}
+    assert split["s2w"] == {"bytes": 170, "count": 2}
+    assert split["unmatched_bytes"] == [] and split["missing"] == {}
+    # count-scaled pairs (while-body collectives) consume one quota per
+    # occurrence; surplus occurrences land in unmatched
+    split = attribute_u8_directions([pair(10, count=3.0)],
+                                    w2s_sizes=[10, 10], s2w_sizes=[])
+    assert split["w2s"] == {"bytes": 20, "count": 2}
+    assert split["unmatched_bytes"] == [10]
+    # expected-but-never-seen sizes surface per direction, as multisets
+    split = attribute_u8_directions([pair(8)], w2s_sizes=[8, 9, 9],
+                                    s2w_sizes=[4])
+    assert split["w2s"] == {"bytes": 8, "count": 1}
+    assert split["s2w"] == {"bytes": 0, "count": 0}
+    assert split["missing"] == {"w2s": [9, 9], "s2w": [4]}
+    # empty expectations: every u8 pair is unmatched
+    split = attribute_u8_directions([pair(5)], w2s_sizes=[], s2w_sizes=[])
+    assert split["unmatched_bytes"] == [5]
+    assert split["w2s"]["count"] == 0 and split["s2w"]["count"] == 0
+
+
 def test_top_contributors_consistent_with_total():
     def f_scan(x, w):
         def body(x, wi):

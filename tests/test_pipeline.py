@@ -11,7 +11,8 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.muon import EF21Muon, EF21MuonConfig, ParamMeta
 from repro.dist.layerwise import LayerPlan
-from repro.dist.pipeline import bucket_ns_flops, build_stage_plan
+from repro.dist.pipeline import (bucket_ns_flops, build_stage_plan,
+                                 s2w_issue_order)
 from repro.wire.layout import build_staged_layout
 
 
@@ -88,6 +89,33 @@ def test_stage_plan_cap_merges_smallest_tail(key):
         build_stage_plan(plan, plan.ns_buckets(), wire_stages=0)
 
 
+def test_s2w_issue_order_descending_receive_work(key):
+    """The s2w broadcast issue order (§9): a deterministic permutation of
+    the stage indices, descending by per-stage receive work (leaf element
+    counts — the decompress+apply chain each broadcast must hide), NOT by
+    the NS FLOPs that ordered the w2s stages."""
+    params, metas = _tree(key)
+    plan = LayerPlan.build(params, metas, w2s="top10", s2w="natural")
+    sp = plan.stage_plan()
+    order = s2w_issue_order(plan, sp)
+    assert sorted(order) == list(range(sp.n_stages))
+    assert order == s2w_issue_order(plan, sp)            # deterministic
+
+    def work(k):
+        return sum(np.prod(plan.leaves[i].shape) for i in sp.stages[k].leaf_ids)
+
+    works = [work(k) for k in order]
+    assert works == sorted(works, reverse=True)
+    # ties break on stage index (stable ascending within equal work)
+    for a, b in zip(order, order[1:]):
+        if work(a) == work(b):
+            assert a < b
+    # the ordering is a schedule, not a repartition: every leaf still
+    # appears exactly once across the ordered stages
+    all_ids = sorted(i for k in order for i in sp.stages[k].leaf_ids)
+    assert all_ids == list(range(len(plan.leaves)))
+
+
 def test_stage_plan_no_buckets_is_single_stage(key):
     params = {"v": jax.random.normal(key, (8,))}
     metas = {"v": ParamMeta("sign", 1.0, 0)}
@@ -126,16 +154,17 @@ def test_staged_layout_byte_exact_repartition(key):
         build_staged_layout(layout, ((0, 1), (1, 2)))
 
 
-def _payloads_for(plan, key, n_workers=2):
+def _payloads_for(plan, key, n_workers=2, direction="w2s"):
     """Real per-leaf payload trees with [n_workers, *stack] leading dims,
-    exactly as phase 3 produces them."""
+    exactly as phase 3 (w2s) / phase 1 (s2w, lead dim 1) produces them."""
     out = []
     for j, lp in enumerate(plan.leaves):
+        comp = getattr(lp, direction)
         wire = jnp.dtype(jnp.bfloat16)
         in_dtype = (jnp.float32
-                    if getattr(lp.w2s, "lossless_wire", False) else wire)
+                    if getattr(comp, "lossless_wire", False) else wire)
 
-        def one(k, c=lp.w2s, s=lp.slice_shape, d=in_dtype):
+        def one(k, c=comp, s=lp.slice_shape, d=in_dtype):
             x = jax.random.normal(k, s, jnp.float32).astype(d)
             payload, _ = c.compress(c.init(k, s, jnp.dtype(jnp.bfloat16)), x)
             return payload
@@ -170,13 +199,15 @@ def test_staged_pack_unpack_roundtrip_bitexact(key):
 
 
 @given(name=st.sampled_from(["top10+natural", "top10", "natural",
-                             "identity"]),
+                             "identity", "identity+natural"]),
+       direction=st.sampled_from(["w2s", "s2w"]),
        L=st.integers(1, 3), m=st.integers(3, 17), n=st.integers(3, 17),
        stages=st.sampled_from(["auto", 1, 2]), seed=st.integers(0, 2 ** 16))
-@settings(max_examples=15, deadline=None)
-def test_staged_roundtrip_property(name, L, m, n, stages, seed):
+@settings(max_examples=20, deadline=None)
+def test_staged_roundtrip_property(name, direction, L, m, n, stages, seed):
     """Hypothesis: per-stage pack -> unpack is the identity bit-for-bit
-    for arbitrary odd shapes, stacked leaves and stage caps, and the
+    for arbitrary odd shapes, stacked leaves and stage caps, in BOTH wire
+    directions (the s2w leg reuses the same leaf partition, §9), and the
     stage bytes always repartition the base buffer exactly."""
     key = jax.random.key(seed)
     params = {"w": jax.ShapeDtypeStruct((m, n), jnp.float32),
@@ -185,12 +216,14 @@ def test_staged_roundtrip_property(name, L, m, n, stages, seed):
     metas = {"w": ParamMeta("spectral", 1.0, 0),
              "s": ParamMeta("spectral", 1.0, 1),
              "v": ParamMeta("sign", 1.0, 0, compressible=False)}
-    plan = LayerPlan.build(params, metas, w2s=name)
+    plan = LayerPlan.build(params, metas, w2s=name, s2w=name)
     staged = plan.staged_wire_layout(
-        jnp.bfloat16, plan.stage_plan(wire_stages=stages))
+        jnp.bfloat16, plan.stage_plan(wire_stages=stages),
+        direction=direction)
+    assert staged.direction == direction
     assert sum(staged.stage_nbytes(k) for k in range(staged.n_stages)) \
-        == plan.wire_layout(jnp.bfloat16).total_nbytes
-    payloads = _payloads_for(plan, key, n_workers=1)
+        == plan.wire_layout(jnp.bfloat16, direction=direction).total_nbytes
+    payloads = _payloads_for(plan, key, n_workers=1, direction=direction)
     for k, ids in enumerate(staged.stage_leaf_ids):
         got = staged.unpack_stage(k, staged.pack_stage(k, payloads))
         for i, g in zip(ids, got):
@@ -247,3 +280,17 @@ def test_staged_collapses_without_bucketing(key):
     b = _run_steps(params, metas, key, wire_stages=1, ns_bucketing=False)
     same = jax.tree.map(lambda x, y: bool(jnp.all(x == y)), a, b)
     assert all(jax.tree.leaves(same))
+
+
+def test_s2w_wire_leg_bit_equal_off_arm(key):
+    """The §9 A/B switch: routing the EF21-P model update through the
+    staged s2w wire buffers (wire_pack_s2w auto-engages here — the hook
+    is set and wire_pack is on) is value-bit-equal to the unpacked
+    phase-1 path, for both the staged and the monolithic schedule."""
+    params, metas = _tree(key)
+    for ws in ("auto", 1):
+        on = _run_steps(params, metas, key, wire_stages=ws)
+        off = _run_steps(params, metas, key, wire_stages=ws,
+                         wire_pack_s2w=False)
+        same = jax.tree.map(lambda a, b: bool(jnp.all(a == b)), on, off)
+        assert all(jax.tree.leaves(same)), (ws, same)

@@ -17,11 +17,12 @@ from repro.wire.codecs import NarrowIntCodec, RawCodec, index_domains
 from repro.wire.layout import build_layout
 
 
-def _single_leaf_layout(name, shape, stack_dims=0, lmo="spectral"):
+def _single_leaf_layout(name, shape, stack_dims=0, lmo="spectral",
+                        direction="w2s"):
     params = {"p": jax.ShapeDtypeStruct(shape, jnp.float32)}
     metas = {"p": ParamMeta(lmo, 1.0, stack_dims)}
-    plan = LayerPlan.build(params, metas, w2s=name)
-    return plan, plan.wire_layout(jnp.bfloat16)
+    plan = LayerPlan.build(params, metas, **{direction: name})
+    return plan, plan.wire_layout(jnp.bfloat16, direction=direction)
 
 
 def _tree_equal(a, b):
@@ -77,6 +78,37 @@ def test_stacked_leaf_roundtrips_bitexact(name, L, m, n, W, seed):
         lambda k: _payload_for(comp, (m, n), k)))(keys)
     buf = layout.pack([payload])
     assert buf.shape == (W, layout.total_nbytes)
+    _tree_equal(layout.unpack(buf)[0], payload)
+
+
+@given(name=st.sampled_from(sorted(C.REGISTRY) + ["identity+natural"]),
+       stacked=st.booleans(), L=st.integers(1, 3),
+       m=st.integers(3, 33), n=st.integers(3, 33),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_s2w_direction_roundtrips_bitexact(name, stacked, L, m, n, seed):
+    """Hypothesis (§9): the s2w wire leg round-trips bit-exactly for
+    every registry compressor (plus identity+natural, the quantised
+    Identity wrapper) on arbitrary odd shapes and stacked leaves — the
+    model-update broadcast buffer carries a lead dim of 1, not
+    n_workers, and the layout records its direction."""
+    key = jax.random.key(seed)
+    shape = (L, m, n) if stacked else (m, n)
+    plan, layout = _single_leaf_layout(name, shape,
+                                       stack_dims=int(stacked),
+                                       direction="s2w")
+    assert layout.direction == "s2w"
+    comp = plan.leaves[0].s2w
+    if stacked:
+        keys = jax.random.split(key, L).reshape(1, L)
+        payload = jax.vmap(jax.vmap(
+            lambda k: _payload_for(comp, (m, n), k)))(keys)
+    else:
+        payload = jax.tree.map(lambda a: a[None],     # server lead dim 1
+                               _payload_for(comp, (m, n), key))
+    buf = layout.pack([payload])
+    assert buf.dtype == jnp.uint8
+    assert buf.shape == (1, layout.total_nbytes)
     _tree_equal(layout.unpack(buf)[0], payload)
 
 
@@ -257,3 +289,46 @@ def test_checkpoint_roundtrip_with_wire_compressors(tmp_path, key):
     a, _ = step(state, data.batch_at(1), 0.01)
     b, _ = step(state2, data.batch_at(1), 0.01)
     _tree_equal(a, b)
+
+
+def test_checkpoint_roundtrip_with_s2w_wire_engaged(tmp_path, key):
+    """Satellite of §9: with the s2w wire leg actually ENGAGED (reshard
+    hooks set, so phase 1 runs pack -> broadcast -> unpack ->
+    apply_payload), the EF21-P state pair (cs_state, w) survives a
+    save/load round-trip bit-exactly and training continues identically
+    — the wire bytes ARE the recurrence, so a restored server must
+    replay it bit-for-bit."""
+    import os
+
+    from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+    params = {"w": jnp.zeros((3, 12, 16)), "v": jnp.zeros((24,))}
+    metas = {"w": ParamMeta("spectral", 1.0, 1),
+             "v": ParamMeta("sign", 1.0, 0, compressible=False)}
+    T = jax.tree.map(lambda p: jax.random.normal(
+        jax.random.fold_in(key, 3), p.shape), params)
+
+    def gal(p, b):
+        loss = sum(jnp.sum((x - t) ** 2) for x, t in
+                   zip(jax.tree.leaves(p), jax.tree.leaves(T)))
+        return loss, jax.tree.map(lambda x, t: 2 * (x - t), p, T)
+
+    opt = EF21Muon(EF21MuonConfig(
+        n_workers=2, beta=0.5, w2s="top10+natural", s2w="natural",
+        use_pallas=False))
+    state = opt.init(key, params, metas)
+    assert state["cs_state"] is not None and state["w"] is not None
+    fn = opt.make_step(metas, reshard_payloads=lambda t: t)
+    step = jax.jit(lambda s, b, t, f=fn: f(s, gal, b, t))
+    state, _ = step(state, jnp.zeros((2, 1)), 0.01)
+    path = os.path.join(tmp_path, "s2w_wire.npz")
+    save_checkpoint(path, state, step=1)
+    state2, at = load_checkpoint(path, state)
+    assert at == 1
+    _tree_equal(state["cs_state"], state2["cs_state"])
+    _tree_equal(state["w"], state2["w"])
+    _tree_equal(state, state2)
+    for i in range(2):
+        state, _ = step(state, jnp.zeros((2, 1)), 0.01)
+        state2, _ = step(state2, jnp.zeros((2, 1)), 0.01)
+    _tree_equal(state, state2)
