@@ -1,0 +1,140 @@
+"""Bench-regression guard (fast CI): fresh ``BENCH_*.json`` artifacts vs
+the committed baselines.
+
+The fast job regenerates ``BENCH_step.json`` / ``BENCH_wire.json`` into
+the workspace (overwriting the checkout), so the committed baseline is
+read from git (``git show <ref>:BENCH_x.json``) and compared row-by-row:
+
+  * wire bytes (exact static accounting: ``wire_bytes``,
+    ``s2w_wire_bytes``, ``two_way_wire_bytes``, ``u8_bytes``) — ANY
+    increase fails: payload accounting is deterministic, a byte
+    regression is a real compression/packing regression.
+  * ``us_per_step`` — fails beyond ``--step-tol`` (default 10%). Wall
+    time is machine-dependent; CI overrides the tolerance via
+    ``BENCH_GUARD_STEP_TOL`` because runner hardware differs from the
+    machine that produced the committed baseline.
+
+Rows are matched by stable identity keys (arch + arm for step, arch +
+compressor pair + wire dtype for wire); unmatched fresh rows are new
+coverage and pass. Output is a one-line-per-metric diff table.
+
+    PYTHONPATH=src python -m benchmarks.bench_guard [--fresh-dir .]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+# file -> (identity key fields, wall-time fields, exact byte fields)
+GUARDS = {
+    "BENCH_step.json": {
+        "key": ("arch", "arm"),
+        "time": ("us_per_step",),
+        "bytes": ("u8_bytes", "wire_bytes"),
+    },
+    "BENCH_wire.json": {
+        "key": ("arch", "w2s", "s2w", "wire"),
+        "time": (),
+        "bytes": ("wire_bytes", "s2w_wire_bytes", "two_way_wire_bytes"),
+    },
+}
+
+
+def load_baseline(name: str, ref: str, root: str) -> dict | None:
+    out = subprocess.run(["git", "show", f"{ref}:{name}"], cwd=root,
+                         capture_output=True, text=True)
+    if out.returncode != 0:
+        return None
+    return json.loads(out.stdout)
+
+
+def _index(rows: list[dict], key_fields: tuple) -> dict:
+    return {tuple(r.get(k) for k in key_fields): r for r in rows}
+
+
+def compare(name: str, base: dict, fresh: dict,
+            step_tol: float) -> tuple[list[str], int]:
+    """Diff one artifact; returns (table lines, failure count)."""
+    spec = GUARDS[name]
+    base_ix = _index(base["rows"], spec["key"])
+    lines, failures = [], 0
+    for key, frow in _index(fresh["rows"], spec["key"]).items():
+        brow = base_ix.get(key)
+        kid = "/".join(str(k) for k in key)
+        if brow is None:
+            lines.append(f"{name} {kid}: new row (no baseline) .. PASS")
+            continue
+        for metric in spec["bytes"]:
+            if metric not in frow and metric not in brow:
+                continue
+            b, f = brow.get(metric), frow.get(metric)
+            ok = b is None or f is None or f <= b
+            failures += 0 if ok else 1
+            lines.append(_line(name, kid, metric, b, f,
+                               "PASS" if ok else "FAIL (byte regression)"))
+        for metric in spec["time"]:
+            b, f = brow.get(metric), frow.get(metric)
+            ok = not b or f is None or f <= b * (1 + step_tol)
+            failures += 0 if ok else 1
+            lines.append(_line(
+                name, kid, metric, b, f,
+                "PASS" if ok else f"FAIL (> {step_tol:.0%} slower)"))
+    return lines, failures
+
+
+def _line(name, kid, metric, b, f, status) -> str:
+    delta = f"{(f - b) / b:+.1%}" if b and f is not None else "n/a"
+    return (f"{name} {kid} {metric}: base={b} fresh={f} "
+            f"delta={delta} .. {status}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default=".",
+                    help="where the regenerated BENCH_*.json live")
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baselines")
+    ap.add_argument("--files", default=",".join(GUARDS),
+                    help="comma-separated subset of the guarded artifacts")
+    ap.add_argument("--step-tol",
+                    type=float,
+                    default=float(os.environ.get("BENCH_GUARD_STEP_TOL",
+                                                 0.10)),
+                    help="allowed relative us_per_step increase "
+                         "(env BENCH_GUARD_STEP_TOL overrides the default)")
+    args = ap.parse_args()
+    from repro.obs.sink import validate_bench_file
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    failures = 0
+    for name in (n.strip() for n in args.files.split(",") if n.strip()):
+        if name not in GUARDS:
+            ap.error(f"unknown artifact {name}; choose from {list(GUARDS)}")
+        fresh_path = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(fresh_path):
+            print(f"{name}: no fresh artifact at {fresh_path} .. "
+                  f"FAIL (bench did not run?)")
+            failures += 1
+            continue
+        validate_bench_file(fresh_path)   # schema gate before comparing
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        base = load_baseline(name, args.baseline_ref, root)
+        if base is None:
+            print(f"{name}: no committed baseline at "
+                  f"{args.baseline_ref} .. PASS (first run)")
+            continue
+        lines, n_fail = compare(name, base, fresh, args.step_tol)
+        print("\n".join(lines))
+        failures += n_fail
+    print(f"bench_guard: {'FAIL' if failures else 'OK'} "
+          f"({failures} regression(s))")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -53,10 +53,11 @@ def main() -> None:
                 print(json.dumps(r), flush=True)
             if not args.no_artifacts:
                 out = os.path.join(args.out_dir, f"BENCH_{name}.json")
-                with open(out, "w") as f:
-                    json.dump({"bench": name, "fast": bool(args.fast),
-                               "rows": rows}, f, indent=2)
-                    f.write("\n")
+                # one exit point for all BENCH artifacts: every row is
+                # validated against the sink's bench schema before the
+                # envelope is written (DESIGN.md §10)
+                from repro.obs.sink import write_bench_artifact
+                write_bench_artifact(out, name, rows, fast=args.fast)
                 print(f"wrote {out}", flush=True)
         except Exception as e:
             failures += 1

@@ -39,6 +39,9 @@ import jax.numpy as jnp
 
 from repro.dist.layerwise import LayerPlan, dense_payload_bytes, vmap_n
 from repro.dist.pipeline import s2w_issue_order
+from repro.obs.metrics import (MetricSet, leaf_names, orth_residual,
+                               rel_error, worker_mean_norm)
+from repro.obs.trace import PHASE_SPANS, phase_span, wire_stage_span
 
 from .error_feedback import apply_payload, ef_compress_step
 from .lmo import default_radius_scale, lmo_direction, lmo_direction_batched
@@ -88,6 +91,20 @@ class EF21MuonConfig:
                                    # "auto" follows wire_pack; False keeps
                                    # the unpacked phase-1 path (the value-
                                    # bit-equal A/B arm); True forces it
+    metrics: bool = False          # collect the in-graph MetricSet (§10):
+                                   # per-leaf EF21 error/momentum norms,
+                                   # compression rel. error, NS residual,
+                                   # wire bytes — returned in
+                                   # aux["metrics"], no host sync. Off =>
+                                   # the step lowers identically (the
+                                   # metric reads never feed the update,
+                                   # so the on arm is value-bit-equal)
+    trace_spans: bool = False      # jax.named_scope the five phases and
+                                   # every staged wire collective (§10)
+                                   # so xprof shows the §8 overlap by
+                                   # name; off => no op-metadata change
+                                   # (host TraceAnnotations are always
+                                   # on — they never touch the lowering)
 
 
 def _unzip(pairs: list, n: int) -> tuple[list, ...]:
@@ -234,6 +251,16 @@ class EF21Muon:
                  t: jax.Array | float) -> tuple[dict, dict]:
             plan = self.plan(state["x"], metas)
 
+            # Observability (§10): in-graph MetricSet + phase/wire spans.
+            # Both default off; the off arm takes the identical code path
+            # (phase_span without graph= is a host TraceAnnotation only,
+            # never a lowering change) so it compiles byte-identical to a
+            # build without the obs layer. Metric reads never feed the
+            # update, so the metrics-on arm stays value-bit-equal.
+            gspan = cfg.trace_spans
+            mset = MetricSet() if cfg.metrics else None
+            lnames = leaf_names(state["x"]) if cfg.metrics else None
+
             # Stage structure first — both wire directions cut their
             # buffers along the same leaf partition (§8, §9).
             buckets = (plan.ns_buckets(mesh=mesh, fsdp=fsdp)
@@ -262,90 +289,102 @@ class EF21Muon:
             # (wire_pack_s2w=False) is value-bit-equal because
             # pack -> unpack is bit-exact and apply_payload is the
             # same estimate update ef_compress_step performs.
-            if cfg.s2w != "identity" and pack_s2w:
-                cs_f = plan.flatten(state["cs_state"])
-                w_f = plan.flatten(state["w"])
-                x_f0 = plan.flatten(state["x"])
-                s_payloads, cs_l = _unzip(plan.map_flat(
-                    lambda lp, cs, w, x: ef_compress_step(
-                        lp.s2w, cs, w, x, cfg.wire_dtype)[:2],
-                    cs_f, w_f, x_f0), 2)
-                # lead dim 1: the server's single broadcast message
-                lead = [jax.tree.map(lambda a: a[None], p)
-                        for p in s_payloads]
+            with phase_span(PHASE_SPANS[0], gspan):
+                if cfg.s2w != "identity" and pack_s2w:
+                    cs_f = plan.flatten(state["cs_state"])
+                    w_f = plan.flatten(state["w"])
+                    x_f0 = plan.flatten(state["x"])
+                    s_payloads, cs_l = _unzip(plan.map_flat(
+                        lambda lp, cs, w, x: ef_compress_step(
+                            lp.s2w, cs, w, x, cfg.wire_dtype)[:2],
+                        cs_f, w_f, x_f0), 2)
+                    # lead dim 1: the server's single broadcast message
+                    lead = [jax.tree.map(lambda a: a[None], p)
+                            for p in s_payloads]
 
-                def broadcast(buf):
-                    # The max-fold over the gathered (bit-identical u8)
-                    # rows is a value identity that consumes EVERY row,
-                    # so the partitioner cannot shrink or elide the
-                    # gather behind the invariant.
-                    tiled = jnp.broadcast_to(
-                        buf, (cfg.n_workers,) + tuple(buf.shape[1:]))
-                    return jnp.max(reshard_updates(tiled),
-                                   axis=0, keepdims=True)
+                    def broadcast(buf):
+                        # The max-fold over the gathered (bit-identical
+                        # u8) rows is a value identity that consumes
+                        # EVERY row, so the partitioner cannot shrink or
+                        # elide the gather behind the invariant.
+                        tiled = jnp.broadcast_to(
+                            buf, (cfg.n_workers,) + tuple(buf.shape[1:]))
+                        return jnp.max(reshard_updates(tiled),
+                                       axis=0, keepdims=True)
 
-                def s2w_apply(i, pl):
-                    lp = plan.leaves[i]
-                    return vmap_n(
-                        lambda q, w: apply_payload(lp.s2w, q, w),
-                        lp.meta.stack_dims)(
-                            jax.tree.map(lambda a: a[0], pl), w_f[i])
+                    def s2w_apply(i, pl):
+                        lp = plan.leaves[i]
+                        return vmap_n(
+                            lambda q, w: apply_payload(lp.s2w, q, w),
+                            lp.meta.stack_dims)(
+                                jax.tree.map(lambda a: a[0], pl), w_f[i])
 
-                w_l: list = [None] * len(plan.leaves)
-                if splan is not None:
-                    swire = plan.staged_wire_layout(
-                        cfg.wire_dtype, splan, direction="s2w")
-                    order = s2w_issue_order(plan, splan)
-                    # all K broadcasts issued up front, heaviest
-                    # receive chain first (§9 overlap story)
-                    sbufs = {k: broadcast(swire.pack_stage(k, lead))
-                             for k in order}
-                    for k in order:
-                        for i, pl in zip(splan.stages[k].leaf_ids,
-                                         swire.unpack_stage(k, sbufs[k])):
+                    w_l: list = [None] * len(plan.leaves)
+                    if splan is not None:
+                        swire = plan.staged_wire_layout(
+                            cfg.wire_dtype, splan, direction="s2w")
+                        order = s2w_issue_order(plan, splan)
+                        # all K broadcasts issued up front, heaviest
+                        # receive chain first (§9 overlap story)
+                        sbufs = {}
+                        for k in order:
+                            with phase_span(wire_stage_span("s2w", k),
+                                            gspan):
+                                sbufs[k] = broadcast(
+                                    swire.pack_stage(k, lead))
+                        for k in order:
+                            for i, pl in zip(
+                                    splan.stages[k].leaf_ids,
+                                    swire.unpack_stage(k, sbufs[k])):
+                                w_l[i] = s2w_apply(i, pl)
+                    else:
+                        swire = plan.wire_layout(cfg.wire_dtype,
+                                                 direction="s2w")
+                        with phase_span(wire_stage_span("s2w", 0), gspan):
+                            buf = broadcast(swire.pack(lead))
+                        for i, pl in enumerate(swire.unpack(buf)):
                             w_l[i] = s2w_apply(i, pl)
+                    w_tree = plan.unflatten(w_l)
+                    cs_tree = plan.unflatten(cs_l)
+                elif cfg.s2w != "identity":
+                    cs_l, w_l = _unzip(plan.map_flat(
+                        lambda lp, cs, w, x: ef_compress_step(
+                            lp.s2w, cs, w, x, cfg.wire_dtype)[1:],
+                        plan.flatten(state["cs_state"]),
+                        plan.flatten(state["w"]),
+                        plan.flatten(state["x"])), 2)
+                    w_tree = plan.unflatten(w_l)
+                    cs_tree = plan.unflatten(cs_l)
                 else:
-                    swire = plan.wire_layout(cfg.wire_dtype,
-                                             direction="s2w")
-                    buf = broadcast(swire.pack(lead))
-                    for i, pl in enumerate(swire.unpack(buf)):
-                        w_l[i] = s2w_apply(i, pl)
-                w_tree, cs_tree = plan.unflatten(w_l), plan.unflatten(cs_l)
-            elif cfg.s2w != "identity":
-                cs_l, w_l = _unzip(plan.map_flat(
-                    lambda lp, cs, w, x: ef_compress_step(
-                        lp.s2w, cs, w, x, cfg.wire_dtype)[1:],
-                    plan.flatten(state["cs_state"]),
-                    plan.flatten(state["w"]),
-                    plan.flatten(state["x"])), 2)
-                w_tree, cs_tree = plan.unflatten(w_l), plan.unflatten(cs_l)
-            else:
-                w_tree, cs_tree = state["x"], None
+                    w_tree, cs_tree = state["x"], None
 
             # ---- 2. per-worker stochastic gradients at W (no cross-worker comm)
-            w_cast = jax.tree.map(
-                lambda w, x: w.astype(x.dtype), w_tree, state["x"])
-            losses, grads = jax.vmap(grad_and_loss, in_axes=(None, 0))(
-                w_cast, batch)
+            with phase_span(PHASE_SPANS[1], gspan):
+                w_cast = jax.tree.map(
+                    lambda w, x: w.astype(x.dtype), w_tree, state["x"])
+                losses, grads = jax.vmap(grad_and_loss, in_axes=(None, 0))(
+                    w_cast, batch)
 
             # ---- 3. momentum + EF21 per worker: R_j = C_D(M_j - G_j)
-            beta = cfg.beta
-            if state["m_w"] is not None:
-                m_new = jax.tree.map(
-                    lambda m, g: ((1.0 - beta) * m.astype(jnp.float32)
-                                  + beta * g.astype(jnp.float32)
-                                  ).astype(m.dtype),
-                    state["m_w"], grads)
-            else:
-                m_new = jax.tree.map(
-                    lambda g: g.astype(cfg.state_dtype), grads)
+            with phase_span(PHASE_SPANS[2], gspan):
+                beta = cfg.beta
+                if state["m_w"] is not None:
+                    m_new = jax.tree.map(
+                        lambda m, g: ((1.0 - beta) * m.astype(jnp.float32)
+                                      + beta * g.astype(jnp.float32)
+                                      ).astype(m.dtype),
+                        state["m_w"], grads)
+                else:
+                    m_new = jax.tree.map(
+                        lambda g: g.astype(cfg.state_dtype), grads)
 
-            payloads, cw_l, gw_l = _unzip(plan.map_flat(
-                lambda lp, cw, gw, m: ef_compress_step(
-                    lp.w2s, cw, gw, m, cfg.wire_dtype),
-                plan.flatten(state["cw_state"]),
-                plan.flatten(state["g_w"]),
-                plan.flatten(m_new), extra_vmap=1), 3)
+                gw_old = plan.flatten(state["g_w"])
+                payloads, cw_l, gw_l = _unzip(plan.map_flat(
+                    lambda lp, cw, gw, m: ef_compress_step(
+                        lp.w2s, cw, gw, m, cfg.wire_dtype),
+                    plan.flatten(state["cw_state"]),
+                    gw_old,
+                    plan.flatten(m_new), extra_vmap=1), 3)
 
             # ---- 4.+5. server receive + layer-wise LMO. Shared per-leaf
             # pieces first: decompress one leaf's gathered payloads, pin
@@ -378,11 +417,18 @@ class EF21Muon:
                 return (x.astype(jnp.float32)
                         + radius * d.astype(jnp.float32)).astype(x.dtype)
 
-            def lmo_bucket(b, gs_l, x_flat, x_l):
+            def lmo_bucket(bi, b, gs_l, x_flat, x_l):
                 g_b = b.stack([gs_l[i] for i in b.leaf_ids], mesh=mesh)
                 d_b = lmo_direction_batched(
                     g_b, ns_steps=cfg.ns_steps,
                     use_pallas=cfg.use_pallas, mesh=mesh, pspec=b.pspec)
+                if mset is not None:
+                    # NS orthogonality residual per bucket (§10): how far
+                    # the batched chain's output is from U Vᵀ — a pure
+                    # read of d_b, never fed back into the update
+                    m_, n_ = b.shape
+                    mset.add(f"ns/orth_residual/b{bi}_{m_}x{n_}",
+                             orth_residual(d_b))
                 x_b = b.stack([x_flat[i] for i in b.leaf_ids],
                               dtype=jnp.float32, mesh=mesh)
                 x_b = x_b + (b.radius_vector(t)[:, None, None]
@@ -404,53 +450,96 @@ class EF21Muon:
                 # in-flight gathers of the later ones. Value-bit-equal to
                 # the monolithic path: staging is a pure repartition.
                 swire = plan.staged_wire_layout(cfg.wire_dtype, splan)
-                bufs = [reshard_payloads(swire.pack_stage(k, payloads))
-                        for k in range(splan.n_stages)]
+                bufs = []
+                with phase_span(PHASE_SPANS[3], gspan):
+                    for k in range(splan.n_stages):
+                        with phase_span(wire_stage_span("w2s", k), gspan):
+                            bufs.append(reshard_payloads(
+                                swire.pack_stage(k, payloads)))
                 gs_l: list = [None] * len(plan.leaves)
                 x_l: list = [None] * len(plan.leaves)
                 for k, stage in enumerate(splan.stages):
-                    for i, pl in zip(stage.leaf_ids,
-                                     swire.unpack_stage(k, bufs[k])):
-                        gs_l[i] = recv_leaf(i, pl, gsrv_l[i])
-                    for bi in stage.bucket_ids:
-                        lmo_bucket(buckets[bi], gs_l, x_flat, x_l)
-                    for i in stage.leaf_ids:
-                        if i not in bucketed:   # stage-0 eager leaves
-                            lp = plan.leaves[i]
-                            x_l[i] = vmap_n(partial(lmo_leaf, lp),
-                                            lp.meta.stack_dims)(
-                                                x_flat[i], gs_l[i])
+                    with phase_span(PHASE_SPANS[3], gspan):
+                        for i, pl in zip(stage.leaf_ids,
+                                         swire.unpack_stage(k, bufs[k])):
+                            gs_l[i] = recv_leaf(i, pl, gsrv_l[i])
+                    with phase_span(PHASE_SPANS[4], gspan):
+                        for bi in stage.bucket_ids:
+                            lmo_bucket(bi, buckets[bi], gs_l, x_flat, x_l)
+                        for i in stage.leaf_ids:
+                            if i not in bucketed:   # stage-0 eager leaves
+                                lp = plan.leaves[i]
+                                x_l[i] = vmap_n(partial(lmo_leaf, lp),
+                                                lp.meta.stack_dims)(
+                                                    x_flat[i], gs_l[i])
             else:
                 # ---- monolithic phase 4: pack the whole message into
                 # one contiguous uint8 buffer (repro.wire), gather it
                 # across the worker axis (trainer hook == ONE fused
                 # all-gather of exactly the accounted bytes), unpack
                 # bit-exactly, decompress, average.
-                if pack_wire:
-                    wire = plan.wire_layout(cfg.wire_dtype)
-                    payloads = wire.unpack(
-                        reshard_payloads(wire.pack(payloads)))
-                else:
-                    payloads = reshard_payloads(payloads)
-                gs_l = [recv_leaf(i, pl, gs) for i, (pl, gs)
-                        in enumerate(zip(payloads, gsrv_l))]
+                with phase_span(PHASE_SPANS[3], gspan):
+                    if pack_wire:
+                        wire = plan.wire_layout(cfg.wire_dtype)
+                        with phase_span(wire_stage_span("w2s", 0), gspan):
+                            buf = reshard_payloads(wire.pack(payloads))
+                        payloads = wire.unpack(buf)
+                    else:
+                        payloads = reshard_payloads(payloads)
+                    gs_l = [recv_leaf(i, pl, gs) for i, (pl, gs)
+                            in enumerate(zip(payloads, gsrv_l))]
 
                 # ---- monolithic phase 5: layer-wise LMO on the server
                 # iterate. With ns_bucketing the spectral leaves run one
                 # batched Newton-Schulz chain per shape bucket (§7),
                 # stacks folded into the batch dim, radii as a [B]
                 # vector — bit-equal to the per-leaf path on jnp.
-                if cfg.ns_bucketing:
-                    x_l = [
-                        x if i in bucketed else
-                        vmap_n(partial(lmo_leaf, lp),
-                               lp.meta.stack_dims)(x, g)
-                        for i, (lp, x, g) in enumerate(
-                            zip(plan.leaves, x_flat, gs_l))]
-                    for b in buckets:
-                        lmo_bucket(b, gs_l, x_flat, x_l)
-                else:
-                    x_l = plan.map_flat(lmo_leaf, x_flat, gs_l)
+                with phase_span(PHASE_SPANS[4], gspan):
+                    if cfg.ns_bucketing:
+                        x_l = [
+                            x if i in bucketed else
+                            vmap_n(partial(lmo_leaf, lp),
+                                   lp.meta.stack_dims)(x, g)
+                            for i, (lp, x, g) in enumerate(
+                                zip(plan.leaves, x_flat, gs_l))]
+                        for bi, b in enumerate(buckets):
+                            lmo_bucket(bi, b, gs_l, x_flat, x_l)
+                    else:
+                        x_l = plan.map_flat(lmo_leaf, x_flat, gs_l)
+
+            if mset is not None:
+                # Per-leaf EF21 telemetry (§10) — pure reads of tensors
+                # the phases above already hold. v = M_j - G_j is the
+                # compressed target, C(v) = G_j' - G_j the decompressed
+                # message, so ‖M_j - G_j'‖ is both the post-update EF21
+                # error e_t and the compression residual ‖C(v) - v‖.
+                m_flat = plan.flatten(m_new)
+                wnew_f = (plan.flatten(w_tree)
+                          if cfg.s2w != "identity" else None)
+                for i, nm in enumerate(lnames):
+                    err = (m_flat[i].astype(jnp.float32)
+                           - gw_l[i].astype(jnp.float32))
+                    v = (m_flat[i].astype(jnp.float32)
+                         - gw_old[i].astype(jnp.float32))
+                    mset.add(f"ef/err_norm/{nm}", worker_mean_norm(err))
+                    mset.add(f"ef/rel_err/{nm}", rel_error(err, v))
+                    mset.add(f"ef/momentum_norm/{nm}",
+                             worker_mean_norm(m_flat[i]))
+                    if wnew_f is not None:
+                        # EF21-P model-estimate error ‖X - W‖ (s2w leg)
+                        mset.add(f"efp/err_norm/{nm}", worker_mean_norm(
+                            x_flat[i].astype(jnp.float32)
+                            - wnew_f[i].astype(jnp.float32), lead=0))
+                # static per-direction wire accounting (constants in the
+                # graph — the sink's per-step rows stay self-describing)
+                mset.add("wire/bytes_w2s", float(
+                    plan.wire_layout(cfg.wire_dtype).total_nbytes))
+                mset.add("wire/bytes_s2w", float(
+                    plan.wire_layout(cfg.wire_dtype,
+                                     direction="s2w").total_nbytes
+                    if cfg.s2w != "identity" else 0.0))
+                mset.add("wire/n_stages", float(
+                    splan.n_stages if splan is not None else 1))
 
             new_state = {
                 "step": state["step"] + 1,
@@ -467,6 +556,8 @@ class EF21Muon:
                    "grad_est_norm": jnp.sqrt(sum(
                        jnp.sum(jnp.square(g.astype(jnp.float32)))
                        for g in gs_l))}
+            if mset is not None:
+                aux["metrics"] = mset
             return new_state, aux
 
         return step

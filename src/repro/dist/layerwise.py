@@ -29,6 +29,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import span
+
 
 def vmap_n(fn: Callable, n: int) -> Callable:
     """vmap ``fn`` over the ``n`` leading (stack) dims of its args."""
@@ -86,21 +88,22 @@ class LayerPlan:
         tracers — only ``.shape`` is read. ``metas`` mirrors the params
         tree with ParamMeta leaves; incompressible leaves get identity
         compressors in both directions."""
-        leaves, treedef = jax.tree.flatten(params)
-        metas_l = treedef.flatten_up_to(metas)
-        plans = []
-        for p, m in zip(leaves, metas_l):
-            shape = tuple(p.shape)
-            stack = shape[:m.stack_dims]
-            sshape = shape[m.stack_dims:]
-            wname = w2s if m.compressible else "identity"
-            sname = s2w if m.compressible else "identity"
-            plans.append(LeafPlan(
-                meta=m, shape=shape, stack_shape=stack, slice_shape=sshape,
-                n_stack=int(math.prod(stack)) if stack else 1,
-                w2s=resolve_compressor(wname, sshape),
-                s2w=resolve_compressor(sname, sshape)))
-        return cls(treedef, plans)
+        with span("plan/build"):
+            leaves, treedef = jax.tree.flatten(params)
+            metas_l = treedef.flatten_up_to(metas)
+            plans = []
+            for p, m in zip(leaves, metas_l):
+                shape = tuple(p.shape)
+                stack = shape[:m.stack_dims]
+                sshape = shape[m.stack_dims:]
+                wname = w2s if m.compressible else "identity"
+                sname = s2w if m.compressible else "identity"
+                plans.append(LeafPlan(
+                    meta=m, shape=shape, stack_shape=stack, slice_shape=sshape,
+                    n_stack=int(math.prod(stack)) if stack else 1,
+                    w2s=resolve_compressor(wname, sshape),
+                    s2w=resolve_compressor(sname, sshape)))
+            return cls(treedef, plans)
 
     # ------------------------------------------------------------- tree ops
     def flatten(self, tree: Any) -> list:
@@ -161,7 +164,9 @@ class LayerPlan:
             tuple(mesh.axis_names),
             tuple(mesh.shape[a] for a in mesh.axis_names), fsdp)
         if key not in self._ns_buckets:
-            self._ns_buckets[key] = build_buckets(self, mesh=mesh, fsdp=fsdp)
+            with span("plan/ns_buckets"):
+                self._ns_buckets[key] = build_buckets(self, mesh=mesh,
+                                                      fsdp=fsdp)
         return self._ns_buckets[key]
 
     # ------------------------------------------------------- wire staging
@@ -179,9 +184,10 @@ class LayerPlan:
             tuple(mesh.shape[a] for a in mesh.axis_names))
         key = (mesh_key, fsdp, wire_stages, ns_steps)
         if key not in self._stage_plans:
-            self._stage_plans[key] = build_stage_plan(
-                self, self.ns_buckets(mesh=mesh, fsdp=fsdp),
-                wire_stages=wire_stages, ns_steps=ns_steps)
+            with span("plan/stage_plan"):
+                self._stage_plans[key] = build_stage_plan(
+                    self, self.ns_buckets(mesh=mesh, fsdp=fsdp),
+                    wire_stages=wire_stages, ns_steps=ns_steps)
         return self._stage_plans[key]
 
     def staged_wire_layout(self, wire_dtype, stage_plan,
@@ -195,8 +201,9 @@ class LayerPlan:
         ids = tuple(s.leaf_ids for s in stage_plan.stages)
         key = (jnp.dtype(wire_dtype).name, ids, direction)
         if key not in self._staged_layouts:
-            self._staged_layouts[key] = build_staged_layout(
-                self.wire_layout(wire_dtype, direction=direction), ids)
+            with span("plan/staged_wire_layout"):
+                self._staged_layouts[key] = build_staged_layout(
+                    self.wire_layout(wire_dtype, direction=direction), ids)
         return self._staged_layouts[key]
 
     def wire_layout(self, wire_dtype, direction: str = "w2s"):
@@ -214,8 +221,9 @@ class LayerPlan:
 
         key = (jnp.dtype(wire_dtype).name, direction)
         if key not in self._wire_layouts:
-            self._wire_layouts[key] = build_layout(self, wire_dtype,
-                                                   direction=direction)
+            with span("plan/wire_layout"):
+                self._wire_layouts[key] = build_layout(self, wire_dtype,
+                                                       direction=direction)
         return self._wire_layouts[key]
 
 

@@ -40,6 +40,7 @@ from repro.launch.hlo_cost import analyze, cost_analysis_dict
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import abstract_params as _abstract_params
 from repro.models.api import build_model, input_specs
+from repro.obs.sink import MetricsWriter
 from repro.train.trainer import Trainer, TrainerConfig
 
 RESULTS = os.path.join(os.path.dirname(__file__), "../../..",
@@ -399,6 +400,10 @@ def main():
     done = set() if args.force else _load_done(args.out)
     wire_stages = args.wire_stages if args.wire_stages == "auto" \
         else int(args.wire_stages)
+    # append-mode sink: the resumable dry-run log keeps its history (the
+    # validator accepts both legacy rows and v1-enveloped ones), new rows
+    # are schema-stamped kind="dryrun" and flushed per combination
+    writer = MetricsWriter(args.out, append=True, flush_every=1)
     for arch in archs:
         for shape in shapes:
             for mesh in meshes:
@@ -446,9 +451,9 @@ def main():
                              "status": "error",
                              "error": f"{type(e).__name__}: {e}"[:500],
                              "trace": traceback.format_exc()[-2000:]}]
-                with open(args.out, "a") as f:
-                    for rec in recs:
-                        f.write(json.dumps(rec) + "\n")
+                for rec in recs:
+                    writer.write_record({"kind": "dryrun", **rec})
+                writer.flush()
                 for rec in recs:
                     brief = {k: rec.get(k) for k in
                              ("tag", "status", "t_compile_s", "hlo_flops",
@@ -465,6 +470,7 @@ def main():
                                        "two_way_bytes_wire",
                                        "two_way_bytes_measured")})
                     print(f"   -> {brief}", flush=True)
+    writer.close()
 
 
 if __name__ == "__main__":

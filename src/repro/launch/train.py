@@ -19,8 +19,46 @@ from repro.configs.base import ShapeSpec
 from repro.core.schedule import warmup_linear_decay
 from repro.data import SyntheticLM
 from repro.models.api import build_model
+from repro.obs.sink import MetricsWriter, run_manifest
+from repro.obs.trace import span_summary
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _ef_summary_rows(metrics: dict, limit: int = 12) -> list[dict]:
+    """Per-layer EF21 error rows from one step's metric dict, largest
+    ``ef/err_norm`` first (the layers where compression bites hardest)."""
+    rows = []
+    for name, v in metrics.items():
+        if not name.startswith("ef/err_norm/"):
+            continue
+        leaf = name[len("ef/err_norm/"):]
+        rows.append({
+            "leaf": leaf, "err_norm": v,
+            "rel_err": metrics.get(f"ef/rel_err/{leaf}"),
+            "momentum_norm": metrics.get(f"ef/momentum_norm/{leaf}"),
+        })
+    rows.sort(key=lambda r: -(r["err_norm"] or 0.0))
+    return rows[:limit]
+
+
+def _print_tables(spans: list[dict], ef_rows: list[dict]) -> None:
+    if spans:
+        print("-- host phase timings --")
+        print(f"{'span':32s} {'count':>6s} {'total_s':>9s} {'max_s':>9s}")
+        for r in spans:
+            print(f"{r['name']:32s} {r['count']:6d} "
+                  f"{r['total_s']:9.4f} {r['max_s']:9.4f}")
+    if ef_rows:
+        print("-- EF21 error by layer (final step, worst first) --")
+        print(f"{'leaf':28s} {'err_norm':>10s} {'rel_err':>8s} "
+              f"{'momentum':>10s}")
+        for r in ef_rows:
+            rel = r["rel_err"]
+            mom = r["momentum_norm"]
+            print(f"{r['leaf']:28s} {r['err_norm']:10.4g} "
+                  f"{(f'{rel:8.3f}' if rel is not None else '       -')} "
+                  f"{(f'{mom:10.4g}' if mom is not None else '         -')}")
 
 
 def main():
@@ -41,6 +79,11 @@ def main():
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--resume", default=None)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write schema-versioned JSONL metrics here "
+                         "(implies in-graph metrics collection, §10)")
+    ap.add_argument("--trace-spans", action="store_true",
+                    help="named-scope the step phases for xprof captures")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,9 +92,11 @@ def main():
     model = build_model(cfg)
     shape = ShapeSpec("cli", "train", args.seq, args.batch)
     data = SyntheticLM(cfg, shape, n_workers=args.workers, seed=args.seed)
-    tr = Trainer(model, TrainerConfig(
+    tcfg = TrainerConfig(
         n_workers=args.workers, beta=args.beta, w2s=args.w2s, s2w=args.s2w,
-        remat=False, use_pallas=False))
+        remat=False, use_pallas=False, metrics=args.metrics_out is not None,
+        trace_spans=args.trace_spans)
+    tr = Trainer(model, tcfg)
     state = tr.init(jax.random.key(args.seed))
     start = 0
     if args.resume:
@@ -78,17 +123,38 @@ def main():
           f"s2w_bytes/round={s2w_wire} s2w_wire_buffer={s2w_buf} "
           f"two_way_wire={buf + s2w_buf} "
           f"wire_stages={stages}")
+    writer = None
+    if args.metrics_out:
+        writer = MetricsWriter(
+            args.metrics_out,
+            manifest=run_manifest(tcfg, None, extra={"arch": cfg.name}))
+    last_metrics: dict = {}
     t0 = time.time()
-    for i in range(start, args.steps):
-        state, aux = step_fn(state, data.batch_at(i), sched(i))
-        if i % args.log_every == 0 or i == args.steps - 1:
-            print(json.dumps({
-                "step": i, "loss": round(float(aux["loss"]), 4),
-                "radius": round(float(sched(i)), 5),
-                "wall_s": round(time.time() - t0, 1)}), flush=True)
-    if args.checkpoint:
-        save_checkpoint(args.checkpoint, state, step=args.steps)
-        print(f"saved {args.checkpoint}")
+    try:
+        for i in range(start, args.steps):
+            state, aux = step_fn(state, data.batch_at(i), sched(i))
+            if i % args.log_every == 0 or i == args.steps - 1:
+                row = {"step": i, "loss": round(float(aux["loss"]), 4),
+                       "radius": round(float(sched(i)), 5),
+                       "wall_s": round(time.time() - t0, 1)}
+                print(json.dumps(row), flush=True)
+                if writer is not None:
+                    last_metrics = aux["metrics"].host_floats()
+                    writer.write("step", metrics=last_metrics, **row)
+        if args.checkpoint:
+            save_checkpoint(args.checkpoint, state, step=args.steps)
+            print(f"saved {args.checkpoint}")
+        spans = span_summary()
+        ef_rows = _ef_summary_rows(last_metrics)
+        _print_tables(spans, ef_rows)
+        if writer is not None:
+            for r in spans:
+                writer.write("span", **r)
+            writer.write("summary", spans=spans, ef_summary=ef_rows)
+    finally:
+        if writer is not None:
+            writer.close()
+            print(f"metrics written to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,113 @@
+"""Trace spans — names for the step's phase structure (DESIGN.md §10).
+
+Two span kinds, one naming convention:
+
+* ``phase_span(name, graph=...)`` wraps a block of *traced* optimizer
+  code. It always enters a ``jax.profiler.TraceAnnotation`` (a host-side
+  TraceMe: real timing when the step runs eagerly, trace-time-only noise
+  under jit — never a lowering change), and, when ``graph`` is true,
+  additionally a ``jax.named_scope`` so the ops lowered inside carry the
+  span name as op metadata and an xprof capture of the jitted step shows
+  the §8 overlap structure by name. ``graph`` is gated by
+  ``EF21MuonConfig.trace_spans`` because op metadata appears in the
+  compiled HLO text — the spans-off arm must lower byte-identical to a
+  build without this module.
+
+* ``span(name)`` times a *host-side* (non-jit) phase — plan build,
+  layout memoisation, checkpoint I/O — into the process-wide
+  ``SpanRecorder`` (and the same TraceAnnotation, so host phases show up
+  in profiler captures too). ``span_summary()`` renders the recorder as
+  rows for the metrics sink / the train CLI's end-of-run table.
+
+Span names are the contract the slow profiler test asserts against:
+``PHASE_SPANS`` for the five algorithm phases of ``core/muon.py``, and
+``wire_stage_span(direction, k)`` for stage ``k``'s gather/broadcast in
+``dist/pipeline.py``'s issue order.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+from collections import OrderedDict
+
+import jax
+
+# The five algorithm phases of EF21-Muon (core/muon.py, DESIGN.md §5),
+# in dataflow order. One span per phase, staged or monolithic.
+PHASE_SPANS = (
+    "ef21/p1_s2w_update",    # EF21-P model estimate + s2w broadcast
+    "ef21/p2_grads",         # per-worker grads at W (vmap, no comm)
+    "ef21/p3_ef_compress",   # momentum + EF21 compress R_j = C_D(M_j-G_j)
+    "ef21/p4_wire_recv",     # payload gathers issued + server receive
+    "ef21/p5_lmo",           # layer-wise LMO (bucketed Newton-Schulz)
+)
+
+
+def wire_stage_span(direction: str, k: int) -> str:
+    """Span name of stage ``k``'s u8 collective: ``direction`` is
+    ``"w2s"`` (payload all-gather) or ``"s2w"`` (update broadcast)."""
+    if direction not in ("w2s", "s2w"):
+        raise ValueError(f"direction must be w2s|s2w, got {direction!r}")
+    return f"wire/{direction}/stage{k}"
+
+
+@contextlib.contextmanager
+def phase_span(name: str, graph: bool = False):
+    """Span around traced optimizer code. Host TraceAnnotation always
+    (lowering-neutral); ``jax.named_scope`` only when ``graph`` — the
+    op-metadata arm the HLO-identity guard keeps off by default."""
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(jax.profiler.TraceAnnotation(name))
+        if graph:
+            stack.enter_context(jax.named_scope(name))
+        yield
+
+
+class SpanRecorder:
+    """Thread-safe accumulator of host-side span wall times."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._spans: OrderedDict[str, list] = OrderedDict()
+
+    def record(self, name: str, dur_s: float) -> None:
+        with self._lock:
+            ent = self._spans.setdefault(name, [0, 0.0, 0.0])
+            ent[0] += 1
+            ent[1] += dur_s
+            ent[2] = max(ent[2], dur_s)
+
+    def summary(self) -> list[dict]:
+        """One row per span name (insertion order): count / total / max."""
+        with self._lock:
+            return [{"name": n, "count": c, "total_s": round(t, 6),
+                     "max_s": round(mx, 6)}
+                    for n, (c, t, mx) in self._spans.items()]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+
+
+# Process-wide recorder: host phases are rare (plan builds, checkpoint
+# I/O, per-step host work) and the CLI summary wants them all in one
+# place. Tests snapshot/clear around themselves.
+RECORDER = SpanRecorder()
+
+
+@contextlib.contextmanager
+def span(name: str, recorder: SpanRecorder | None = None):
+    """Wall-time a host-side (non-jit) phase into the recorder, and mark
+    it as a TraceAnnotation so profiler captures see it too."""
+    rec = RECORDER if recorder is None else recorder
+    t0 = time.perf_counter()
+    with jax.profiler.TraceAnnotation(name):
+        try:
+            yield
+        finally:
+            rec.record(name, time.perf_counter() - t0)
+
+
+def span_summary(recorder: SpanRecorder | None = None) -> list[dict]:
+    return (RECORDER if recorder is None else recorder).summary()

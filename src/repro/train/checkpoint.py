@@ -14,6 +14,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs.trace import span
+
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
     out = {}
@@ -28,26 +30,28 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
 
 
 def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
-    flat = _flatten(tree)
-    if step is not None:
-        flat["__step__"] = np.asarray(step)
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **flat)
+    with span("ckpt/save"):
+        flat = _flatten(tree)
+        if step is not None:
+            flat["__step__"] = np.asarray(step)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        np.savez(path, **flat)
 
 
 def load_checkpoint(path: str, like: Any) -> tuple[Any, int | None]:
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs)."""
-    with np.load(path) as data:
-        flat = {k: data[k] for k in data.files}
-    step = int(flat.pop("__step__")) if "__step__" in flat else None
+    with span("ckpt/load"):
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+        step = int(flat.pop("__step__")) if "__step__" in flat else None
 
-    def rebuild(sub: Any, prefix: str = ""):
-        if isinstance(sub, dict):
-            return {k: rebuild(v, f"{prefix}{k}/") for k, v in sub.items()}
-        if sub is None:
-            return None
-        arr = flat[prefix.rstrip("/")]
-        return jax.numpy.asarray(arr).astype(sub.dtype)
+        def rebuild(sub: Any, prefix: str = ""):
+            if isinstance(sub, dict):
+                return {k: rebuild(v, f"{prefix}{k}/") for k, v in sub.items()}
+            if sub is None:
+                return None
+            arr = flat[prefix.rstrip("/")]
+            return jax.numpy.asarray(arr).astype(sub.dtype)
 
-    return rebuild(like), step
+        return rebuild(like), step

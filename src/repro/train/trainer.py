@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.muon import EF21Muon, EF21MuonConfig
 from repro.dist.sharding import (batch_pspec, state_pspecs, to_shardings,
                                  worker_axis_for)
+from repro.obs.trace import phase_span
 
 
 @dataclass
@@ -59,6 +60,10 @@ class TrainerConfig:
     wire_pack_s2w: Any = "auto"  # s2w wire leg (§9): pack the EF21-P
                                  # model-update broadcast; "auto" follows
                                  # wire_pack, False = unpacked A/B arm
+    metrics: bool = False      # in-graph MetricSet in aux["metrics"]
+                               # (§10); off arm lowers identically
+    trace_spans: bool = False  # named-scope the phases + wire stages
+                               # (§10) for xprof; off = no HLO change
 
 
 class Trainer:
@@ -71,7 +76,8 @@ class Trainer:
             s2w=tcfg.s2w, ns_steps=tcfg.ns_steps,
             use_pallas=tcfg.use_pallas, wire_pack=tcfg.wire_pack,
             ns_bucketing=tcfg.ns_bucketing, wire_stages=tcfg.wire_stages,
-            wire_pack_s2w=tcfg.wire_pack_s2w))
+            wire_pack_s2w=tcfg.wire_pack_s2w, metrics=tcfg.metrics,
+            trace_spans=tcfg.trace_spans))
         # metas are static: build once from the model's abstract init
         from repro.models.api import abstract_params
         self._params_shapes, self.metas = abstract_params(model)
@@ -134,7 +140,9 @@ class Trainer:
                         x = jax.lax.with_sharding_constraint(x, sharded)
                     return jax.lax.with_sharding_constraint(x, replicated)
 
-                return jax.tree.map(one, payloads)
+                with phase_span("trainer/reshard_payloads",
+                                self.tcfg.trace_spans):
+                    return jax.tree.map(one, payloads)
 
             def broadcast_updates(bufs):
                 # s2w communication (DESIGN.md §9): the optimizer hands
@@ -147,7 +155,9 @@ class Trainer:
                 # of the broadcast, measured by the same collective the
                 # w2s leg uses, so the SPMD byte invariant becomes a
                 # two-direction statement.
-                return reshard(bufs)
+                with phase_span("trainer/broadcast_updates",
+                                self.tcfg.trace_spans):
+                    return reshard(bufs)
         else:
             reshard = None            # single-process: no collective,
             broadcast_updates = None  # no wire pack in either direction
