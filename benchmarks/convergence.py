@@ -1,6 +1,13 @@
 """Convergence-rate trend check (Theorems 3/4): deterministic EF21-Muon on
 a smooth non-convex problem should drive min_k ||grad||_* at ~O(1/sqrt(K))
 — we verify the log-log slope of the running-min gradient norm is <= -0.4.
+
+``run_elastic`` is the partial-participation arm (DESIGN.md §11, the
+Gluon-FL degradation claim): the same heterogeneous quadratic under
+bernoulli(p) participation for p in {1.0, 0.75, 0.5} — convergence
+degrades gracefully with p (frozen EF21 state + dynamic-count fold), it
+does not diverge. Emitted as ``BENCH_elastic.json`` via benchmarks/run.py
+through the repro.metrics/v1 bench schema.
 """
 from __future__ import annotations
 
@@ -46,3 +53,45 @@ def run(fast: bool = False):
              "final_min_dual_grad_norm": float(run_min[-1]),
              "loglog_slope": round(float(sl), 3),
              "matches_theory": bool(sl <= -0.35)}]
+
+
+def run_elastic(fast: bool = False):
+    """Elastic-participation arm: 4 heterogeneous workers, bernoulli(p)
+    participation, one row per p in {1.0, 0.75, 0.5}."""
+    key = jax.random.key(0)
+    n_w = 4
+    Ts = jax.random.normal(key, (n_w, 16, 16))
+    opt_pt = jnp.mean(Ts, axis=0)    # minimiser of the average quadratic
+
+    def gal(p, wb):
+        t = Ts[jnp.int32(wb[0])]
+        return 0.5 * jnp.sum((p - t) ** 2), (p - t)
+
+    metas = ParamMeta("spectral", 1.0, 0)
+    batch = jnp.arange(float(n_w)).reshape(n_w, 1)
+    K = 60 if fast else 200
+    rows = []
+    for p in (1.0, 0.75, 0.5):
+        spec = "full" if p == 1.0 else f"bernoulli({p})"
+        opt = EF21Muon(EF21MuonConfig(
+            n_workers=n_w, beta=0.5, w2s="top10", use_pallas=False,
+            participation=spec))
+        state = opt.init(key, jnp.zeros((16, 16)), metas)
+        step = jax.jit(lambda s, b, o=opt: o.make_step(metas)(
+            s, gal, b, 0.05))
+        n_part = []
+        for _ in range(K):
+            state, aux = step(state, batch)
+            n_part.append(float(aux.get("n_participants", n_w)))
+        err = float(jnp.linalg.norm(state["x"] - opt_pt)
+                    / jnp.linalg.norm(opt_pt))
+        rows.append({
+            "bench": "elastic", "p": p, "participation": spec, "K": K,
+            "final_rel_err": round(err, 4),
+            "mean_participants": round(float(np.mean(n_part)), 3),
+            "final_loss": round(float(aux["loss"]), 4),
+            "all_finite": bool(all(
+                jnp.all(jnp.isfinite(lf)) for lf in jax.tree.leaves(state)
+                if jnp.issubdtype(lf.dtype, jnp.inexact))),
+            "converged": bool(err < 0.5)})
+    return rows

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.layerwise import LayerPlan, dense_payload_bytes, vmap_n
+from repro.dist.participation import (mask_bcast, participation_mask,
+                                      payload_finite_mask, validate_spec)
 from repro.dist.pipeline import s2w_issue_order
 from repro.obs.metrics import (MetricSet, leaf_names, orth_residual,
                                rel_error, worker_mean_norm)
@@ -105,6 +107,29 @@ class EF21MuonConfig:
                                    # name; off => no op-metadata change
                                    # (host TraceAnnotations are always
                                    # on — they never touch the lowering)
+    participation: Any = "full"    # elastic worker participation (§11):
+                                   # "full" (every worker — takes the
+                                   # exact pre-§11 code path, lowering-
+                                   # identical), "bernoulli(p)",
+                                   # "round_robin(k)", or a
+                                   # dist.participation.Explicit mask
+                                   # table. Absent workers' EF21 error/
+                                   # momentum/compressor state freezes
+                                   # and the server fold normalises by
+                                   # the dynamic participant count; the
+                                   # wire collectives keep their static
+                                   # shapes (masked at fold time)
+    participation_seed: int = 0    # seeds bernoulli schedules; the
+                                   # history is deterministic in
+                                   # (spec, seed, step) => resume-stable
+    nonfinite_guard: bool = False  # per-worker payload finiteness check
+                                   # (§11): a worker whose payload
+                                   # carries NaN/Inf is demoted to non-
+                                   # participating for the step; all-
+                                   # poisoned steps fall back to a
+                                   # global skip (X frozen). Forced on
+                                   # whenever a FaultPlan is passed to
+                                   # make_step
 
 
 def _unzip(pairs: list, n: int) -> tuple[list, ...]:
@@ -213,7 +238,8 @@ class EF21Muon:
                   reshard_payloads: Callable | None = None,
                   donate: bool = False, mesh=None,
                   fsdp: bool = False,
-                  reshard_updates: Callable | None = None) -> Callable:
+                  reshard_updates: Callable | None = None,
+                  faults=None) -> Callable:
         """``reshard_payloads`` is the cross-worker communication hook
         (the trainer's worker-axis all-gather). None means single-process
         — there is no collective to fuse, so the wire pack/unpack is
@@ -233,8 +259,20 @@ class EF21Muon:
         and the batched chain is pinned to it (constraints on the jnp
         path, ``shard_map`` around the fused kernel on the Pallas path)
         instead of losing the per-leaf TP/zero-1 shardings at the bucket
-        concat. Single-process callers leave them unset."""
+        concat. Single-process callers leave them unset.
+
+        ``faults`` is an optional ``train.faults.FaultPlan`` — a seeded,
+        declared schedule of worker drops, poisoned gradient leaves and
+        bit-flipped wire payloads injected inside the step (§11). Passing
+        one forces the non-finite guard on."""
         cfg = self.cfg
+        validate_spec(cfg.participation, cfg.n_workers)
+        # elastic participation (§11): the masked fold/commit path is
+        # built only when something can actually mask — participation
+        # "full" without the guard takes the exact pre-§11 code path
+        # (lowering-identical, the bit-equal A/B arm)
+        guard = cfg.nonfinite_guard or faults is not None
+        elastic = cfg.participation != "full" or guard
         pack_wire = cfg.wire_pack and reshard_payloads is not None
         if reshard_updates is None:
             reshard_updates = reshard_payloads
@@ -364,6 +402,13 @@ class EF21Muon:
                     lambda w, x: w.astype(x.dtype), w_tree, state["x"])
                 losses, grads = jax.vmap(grad_and_loss, in_axes=(None, 0))(
                     w_cast, batch)
+                if faults is not None:
+                    # poisoned gradient leaves (§11): NaN/Inf injected on
+                    # the declared schedule — flows through momentum into
+                    # the payload, where the non-finite guard demotes the
+                    # worker. Losses stay clean: the injection models a
+                    # corrupted backward pass, not a diverged model.
+                    grads = faults.inject_grads(grads, state["step"])
 
             # ---- 3. momentum + EF21 per worker: R_j = C_D(M_j - G_j)
             with phase_span(PHASE_SPANS[2], gspan):
@@ -400,13 +445,48 @@ class EF21Muon:
                 rep = jax.sharding.NamedSharding(
                     mesh, jax.sharding.PartitionSpec())
 
-            def recv_leaf(i, pl, gs):
+            # ---- elastic participation (§11): the scheduled mask comes
+            # from the step counter; the guard ANDs in per-worker payload
+            # finiteness AFTER unpack (so torn wire buffers are caught
+            # too). resolve_mask returns the final mask, the dynamic-
+            # count fold denominator, the skip-step flag (no survivors)
+            # and the demoted-by-guard count.
+            sched_mask = None
+            if elastic:
+                sched_mask = participation_mask(
+                    cfg.participation, cfg.n_workers, state["step"],
+                    cfg.participation_seed)
+                if faults is not None:
+                    sched_mask = sched_mask & faults.drop_mask(
+                        state["step"])
+
+            def resolve_mask(recv_payloads):
+                m = sched_mask
+                demoted = jnp.zeros((), jnp.int32)
+                if guard:
+                    finite = payload_finite_mask(recv_payloads,
+                                                 cfg.n_workers)
+                    demoted = jnp.sum((m & ~finite).astype(jnp.int32))
+                    m = m & finite
+                cnt = jnp.sum(m.astype(jnp.int32))
+                return (m, jnp.maximum(cnt, 1).astype(jnp.float32),
+                        cnt > 0, demoted)
+
+            def recv_leaf(i, pl, gs, part=None):
                 lp = plan.leaves[i]
                 d = vmap_n(lambda s: lp.w2s.decompress(
                     s, lp.slice_shape, jnp.float32),
                     lp.meta.stack_dims + 1)(pl)
                 if rep is not None:
                     d = jax.lax.with_sharding_constraint(d, rep)
+                if part is not None:
+                    # mask-weighted fold over the dynamic participant
+                    # count; where (not multiply) so a demoted worker's
+                    # NaNs never reach the sum
+                    m, denom = part[0], part[1]
+                    d = jnp.where(mask_bcast(m, d.ndim), d, 0.0)
+                    return (gs.astype(jnp.float32)
+                            + jnp.sum(d, axis=0) / denom).astype(gs.dtype)
                 return (gs.astype(jnp.float32)
                         + jnp.mean(d, axis=0)).astype(gs.dtype)
 
@@ -454,15 +534,37 @@ class EF21Muon:
                 with phase_span(PHASE_SPANS[3], gspan):
                     for k in range(splan.n_stages):
                         with phase_span(wire_stage_span("w2s", k), gspan):
-                            bufs.append(reshard_payloads(
-                                swire.pack_stage(k, payloads)))
+                            buf = reshard_payloads(
+                                swire.pack_stage(k, payloads))
+                            if faults is not None:
+                                buf = faults.inject_wire(
+                                    buf, state["step"], k, "w2s")
+                            bufs.append(buf)
                 gs_l: list = [None] * len(plan.leaves)
                 x_l: list = [None] * len(plan.leaves)
+                part = None
+                staged_pl: list = [None] * len(plan.leaves)
+                if elastic:
+                    # the guard's per-worker demotion is a STEP-global
+                    # decision, so every stage unpacks before the first
+                    # fold (§11 degradation semantics: the K gathers
+                    # still issue up front and keep their §8 bytes/
+                    # counts, but the folds now wait on all of them —
+                    # robustness trades away some overlap)
+                    with phase_span(PHASE_SPANS[3], gspan):
+                        for k, stage in enumerate(splan.stages):
+                            for i, pl in zip(
+                                    stage.leaf_ids,
+                                    swire.unpack_stage(k, bufs[k])):
+                                staged_pl[i] = pl
+                        part = resolve_mask(staged_pl)
                 for k, stage in enumerate(splan.stages):
                     with phase_span(PHASE_SPANS[3], gspan):
-                        for i, pl in zip(stage.leaf_ids,
-                                         swire.unpack_stage(k, bufs[k])):
-                            gs_l[i] = recv_leaf(i, pl, gsrv_l[i])
+                        pls = ([staged_pl[i] for i in stage.leaf_ids]
+                               if elastic
+                               else swire.unpack_stage(k, bufs[k]))
+                        for i, pl in zip(stage.leaf_ids, pls):
+                            gs_l[i] = recv_leaf(i, pl, gsrv_l[i], part)
                     with phase_span(PHASE_SPANS[4], gspan):
                         for bi in stage.bucket_ids:
                             lmo_bucket(bi, buckets[bi], gs_l, x_flat, x_l)
@@ -483,10 +585,14 @@ class EF21Muon:
                         wire = plan.wire_layout(cfg.wire_dtype)
                         with phase_span(wire_stage_span("w2s", 0), gspan):
                             buf = reshard_payloads(wire.pack(payloads))
+                            if faults is not None:
+                                buf = faults.inject_wire(
+                                    buf, state["step"], 0, "w2s")
                         payloads = wire.unpack(buf)
                     else:
                         payloads = reshard_payloads(payloads)
-                    gs_l = [recv_leaf(i, pl, gs) for i, (pl, gs)
+                    part = resolve_mask(payloads) if elastic else None
+                    gs_l = [recv_leaf(i, pl, gs, part) for i, (pl, gs)
                             in enumerate(zip(payloads, gsrv_l))]
 
                 # ---- monolithic phase 5: layer-wise LMO on the server
@@ -506,6 +612,39 @@ class EF21Muon:
                             lmo_bucket(bi, b, gs_l, x_flat, x_l)
                     else:
                         x_l = plan.map_flat(lmo_leaf, x_flat, gs_l)
+
+            if elastic:
+                # ---- §11 commit: absent/demoted workers' EF21 error
+                # state (G_j), momentum and compressor sketches are
+                # bitwise FROZEN (the Gluon-FL partial-participation
+                # contraction argument needs exactly this); if no worker
+                # survived — every payload poisoned — the whole step
+                # falls back to a global skip: X and g_server do not
+                # move (the fold already added exactly 0, but the LMO
+                # direction of a stale g must not be walked either).
+                effm, _, any_p, n_demoted = part
+
+                def freeze(new, old):
+                    return jax.tree.map(
+                        lambda n, o: jnp.where(
+                            mask_bcast(effm, n.ndim), n, o), new, old)
+
+                gw_l = [freeze(n, o) for n, o in zip(gw_l, gw_old)]
+                cw_l = [freeze(n, o) for n, o in
+                        zip(cw_l, plan.flatten(state["cw_state"]))]
+                if state["m_w"] is not None:
+                    m_new = freeze(m_new, state["m_w"])
+                x_l = [jnp.where(any_p, xn, xo)
+                       for xn, xo in zip(x_l, x_flat)]
+                gs_l = [jnp.where(any_p, gn, go)
+                        for gn, go in zip(gs_l, gsrv_l)]
+                if mset is not None:
+                    mset.add("part/n_participants",
+                             jnp.sum(effm.astype(jnp.float32)))
+                    mset.add("part/demoted",
+                             n_demoted.astype(jnp.float32))
+                    mset.add("part/skipped_step",
+                             1.0 - any_p.astype(jnp.float32))
 
             if mset is not None:
                 # Per-leaf EF21 telemetry (§10) — pure reads of tensors
@@ -556,6 +695,10 @@ class EF21Muon:
                    "grad_est_norm": jnp.sqrt(sum(
                        jnp.sum(jnp.square(g.astype(jnp.float32)))
                        for g in gs_l))}
+            if elastic:
+                aux["participation"] = part[0]
+                aux["n_participants"] = jnp.sum(part[0].astype(jnp.int32))
+                aux["skipped"] = ~part[2]
             if mset is not None:
                 aux["metrics"] = mset
             return new_state, aux

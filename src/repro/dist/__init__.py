@@ -1,6 +1,8 @@
 # Distribution layer: mesh partition rules + layer-wise optimizer plumbing.
 from .bucketing import NSBucket, build_buckets
 from .layerwise import LayerPlan, LeafPlan, resolve_compressor, vmap_n
+from .participation import (Explicit, mask_bcast, participation_mask,
+                            payload_finite_mask, validate_spec)
 from .pipeline import StagePlan, WireStage, bucket_ns_flops, build_stage_plan
 from .sharding import (batch_pspec, n_workers_for, ns_bucket_pspec,
                        param_pspec, param_pspecs, serve_pspecs, state_pspecs,
@@ -12,4 +14,6 @@ __all__ = [
     "StagePlan", "WireStage", "bucket_ns_flops", "build_stage_plan",
     "param_pspec", "param_pspecs", "state_pspecs", "batch_pspec",
     "serve_pspecs", "to_shardings", "worker_axis_for", "n_workers_for",
+    "Explicit", "participation_mask", "payload_finite_mask",
+    "validate_spec", "mask_bcast",
 ]

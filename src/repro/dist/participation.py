@@ -1,0 +1,153 @@
+"""Elastic per-step worker participation (DESIGN.md §11).
+
+EF21-Muon's worker-axis all-gather assumes every worker shows up every
+step; at production scale workers straggle, die, and emit NaNs. The
+*Communication-Efficient Gluon in Federated Learning* analysis gives the
+partial-participation recipe with error feedback: a worker that skips a
+round simply FREEZES its EF21 error state (G_j, momentum, compressor
+sketches) — the contraction argument needs exactly this — while the
+server folds only the participants, normalised by the *dynamic*
+participant count.
+
+This module is the static/schedule half of that story:
+
+  * ``participation_mask(spec, n, step, seed)`` — the per-step
+    ``[n_workers]`` bool mask, computed IN-GRAPH from the (traced) step
+    counter, so the jitted step stays a single static-shape program: the
+    staged u8 gathers still move every worker's payload (same K
+    collectives, same bytes — the §6/§8/§9 wire invariants are
+    untouched) and absence is applied at fold/commit time via
+    ``where``-masking.
+  * ``payload_finite_mask(payloads, n)`` — the non-finite guard: a
+    per-worker finiteness reduction over the float leaves of the
+    (post-unpack) payload pytrees. A worker whose payload carries
+    NaN/Inf — a poisoned gradient, a torn wire buffer — is auto-demoted
+    to non-participating for the step, so the poison never enters
+    ``g_server`` or the worker's own EF21 state.
+
+Schedules (``spec`` is a string or an ``Explicit`` instance):
+
+  ``"full"``            every worker, every step (the bit-equal arm —
+                        the optimizer skips the masked path entirely)
+  ``"bernoulli(p)"``    each worker participates i.i.d. w.p. ``p`` per
+                        step, seeded + step-keyed => deterministic and
+                        resume-stable
+  ``"round_robin(k)"``  a rotating contiguous window of ``k`` workers
+  ``Explicit(masks)``   an explicit mask table, indexed ``step % len``
+                        (the fault-injection / test override)
+
+All schedules may yield an all-zero mask (bernoulli genuinely, Explicit
+by construction); the optimizer's skip-step fallback handles it.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_BERNOULLI_RE = re.compile(r"^bernoulli\(([0-9.eE+-]+)\)$")
+_ROUND_ROBIN_RE = re.compile(r"^round_robin\(([0-9]+)\)$")
+
+
+@dataclass(frozen=True)
+class Explicit:
+    """Explicit per-step mask table: ``masks[step % len(masks)]``.
+
+    ``masks`` is a tuple of length-``n_workers`` tuples of 0/1 — static
+    data, so the whole table becomes one constant in the graph and tests
+    can pin exactly which worker is absent at which step."""
+    masks: tuple
+
+    def __post_init__(self):
+        if not self.masks:
+            raise ValueError("Explicit participation needs >= 1 mask")
+        n = len(self.masks[0])
+        if any(len(m) != n for m in self.masks):
+            raise ValueError("Explicit masks must all have the same length")
+
+
+def validate_spec(spec, n_workers: int) -> None:
+    """Raise ValueError on a malformed participation spec (called once
+    at step-build time, so CLI typos fail fast, not at trace time)."""
+    if isinstance(spec, Explicit):
+        if len(spec.masks[0]) != n_workers:
+            raise ValueError(
+                f"Explicit masks are for {len(spec.masks[0])} workers, "
+                f"optimizer has {n_workers}")
+        return
+    if not isinstance(spec, str):
+        raise ValueError(f"participation spec must be str or Explicit, "
+                         f"got {type(spec).__name__}")
+    if spec == "full":
+        return
+    m = _BERNOULLI_RE.match(spec)
+    if m:
+        p = float(m.group(1))
+        if not 0.0 < p <= 1.0:
+            raise ValueError(f"bernoulli(p) needs 0 < p <= 1, got {p}")
+        return
+    m = _ROUND_ROBIN_RE.match(spec)
+    if m:
+        k = int(m.group(1))
+        if not 1 <= k <= n_workers:
+            raise ValueError(
+                f"round_robin(k) needs 1 <= k <= {n_workers}, got {k}")
+        return
+    raise ValueError(
+        f"unknown participation spec {spec!r}; expected 'full', "
+        f"'bernoulli(p)', 'round_robin(k)' or an Explicit mask table")
+
+
+def participation_mask(spec, n_workers: int, step, seed: int = 0):
+    """The ``[n_workers]`` bool participation mask for ``step`` (a traced
+    or concrete int32 scalar). Deterministic in (spec, seed, step) — a
+    resumed run replays the identical participation history."""
+    if isinstance(spec, Explicit):
+        table = jnp.asarray(spec.masks, jnp.bool_)
+        return table[jnp.mod(jnp.asarray(step, jnp.int32), table.shape[0])]
+    if spec == "full":
+        return jnp.ones((n_workers,), jnp.bool_)
+    m = _BERNOULLI_RE.match(spec)
+    if m:
+        key = jax.random.fold_in(jax.random.key(seed),
+                                 jnp.asarray(step, jnp.int32))
+        return jax.random.bernoulli(key, float(m.group(1)), (n_workers,))
+    m = _ROUND_ROBIN_RE.match(spec)
+    if m:
+        k = int(m.group(1))
+        # rotating contiguous window: step s keeps workers
+        # {(s*k + i) mod n : i < k} — every worker participates k/n of
+        # the time and the window advances by k each step
+        start = jnp.mod(jnp.asarray(step, jnp.int32) * k, n_workers)
+        offset = jnp.mod(jnp.arange(n_workers, dtype=jnp.int32) - start,
+                         n_workers)
+        return offset < k
+    raise ValueError(f"unknown participation spec {spec!r}")
+
+
+def payload_finite_mask(payloads, n_workers: int):
+    """Per-worker payload finiteness: ``[n_workers]`` bool, False for any
+    worker whose payload carries a non-finite float anywhere.
+
+    ``payloads`` is the optimizer's flat per-leaf list of payload pytrees,
+    each leaf ``[n_workers, ...]`` (worker-lead). Only inexact leaves are
+    checked — integer index/code leaves cannot encode NaN (a bit-flipped
+    index decodes to a wrong-but-finite scatter, which the EF21 feedback
+    loop absorbs like any other finite compression error)."""
+    flags = jnp.ones((n_workers,), jnp.bool_)
+    for pl in payloads:
+        for leaf in jax.tree.leaves(pl):
+            if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                continue
+            axes = tuple(range(1, leaf.ndim))
+            flags = flags & jnp.all(jnp.isfinite(
+                leaf.astype(jnp.float32)), axis=axes)
+    return flags
+
+
+def mask_bcast(mask, ndim: int):
+    """Reshape a ``[n]`` mask to broadcast against a worker-lead
+    ``[n, ...]`` array of rank ``ndim``."""
+    return mask.reshape(mask.shape + (1,) * (ndim - 1))

@@ -41,6 +41,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models.api import abstract_params as _abstract_params
 from repro.models.api import build_model, input_specs
 from repro.obs.sink import MetricsWriter
+from repro.train.faults import parse_faults
 from repro.train.trainer import Trainer, TrainerConfig
 
 RESULTS = os.path.join(os.path.dirname(__file__), "../../..",
@@ -101,7 +102,8 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                s2w: str = "identity", pad_heads: int | None = None,
                zero1_lmo: bool = False, wire_pack: bool = True,
                ns_bucketing: bool = True, wire_stages="auto",
-               wire_pack_s2w="auto"):
+               wire_pack_s2w="auto", participation="full",
+               faults: str | None = None):
     """Lower + compile one (arch, shape, mesh). Returns the record dict."""
     import dataclasses
     cfg = get_config(arch)
@@ -132,12 +134,19 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
     s2w_stage_sizes: list = []
     if shape.kind == "train":
         n_w = n_workers_for(mesh)
+        fplan = (parse_faults(faults, n_w) if faults else None)
         tr = Trainer(model, TrainerConfig(
             n_workers=n_w, beta=beta, w2s=w2s, s2w=s2w, fsdp=use_fsdp,
             use_pallas=False, zero1_lmo=zero1_lmo,
             wire_pack=wire_pack, ns_bucketing=ns_bucketing,
-            wire_stages=wire_stages, wire_pack_s2w=wire_pack_s2w),
+            wire_stages=wire_stages, wire_pack_s2w=wire_pack_s2w,
+            participation=participation, faults=fplan),
             mesh=mesh)
+        if participation != "full" or fplan is not None:
+            # the elastic/chaos dry-run arm: prove the masked fold +
+            # guard lower and compile at production scale
+            rec.update(participation=str(participation),
+                       faults=faults or "")
         # wire accounting: analytic Table-2 bytes vs the exact bytes the
         # fused payload buffer moves (compare with the measured
         # u8_coll_bytes parsed from the compiled HLO below; that
@@ -384,6 +393,13 @@ def main():
                          "pipeline on AND off (wire_stages=1) and record "
                          "exposed_collective_ratio (overlap-aware "
                          "roofline, staged / monolithic)")
+    ap.add_argument("--participation", default="full", metavar="SPEC",
+                    help="elastic worker participation (§11): 'full', "
+                         "'bernoulli(p)' or 'round_robin(k)' — proves "
+                         "the masked fold compiles at production scale")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="chaos schedule compiled into the step "
+                         "(repro.train.faults grammar)")
     ap.add_argument("--out", default=RESULTS)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -424,7 +440,9 @@ def main():
                           pad_heads=args.pad_heads, zero1_lmo=args.zero1,
                           wire_pack=not args.no_wire_pack,
                           wire_pack_s2w=(False if args.no_wire_pack_s2w
-                                         else "auto"))
+                                         else "auto"),
+                          participation=args.participation,
+                          faults=args.faults)
                 try:
                     if args.ns_ab:
                         recs = list(ns_ab_pair(arch, shape, mesh == "multi",

@@ -22,6 +22,7 @@ from repro.models.api import build_model
 from repro.obs.sink import MetricsWriter, run_manifest
 from repro.obs.trace import span_summary
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.faults import parse_faults
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -84,6 +85,14 @@ def main():
                          "(implies in-graph metrics collection, §10)")
     ap.add_argument("--trace-spans", action="store_true",
                     help="named-scope the step phases for xprof captures")
+    ap.add_argument("--participation", default="full", metavar="SPEC",
+                    help="elastic worker participation (§11): 'full', "
+                         "'bernoulli(p)' or 'round_robin(k)'")
+    ap.add_argument("--participation-seed", type=int, default=0)
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="chaos schedule, e.g. "
+                         "'drop:w=1:steps=5-10,nan:w=0:steps=7,"
+                         "flip:steps=4:bits=8' (repro.train.faults)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -92,10 +101,13 @@ def main():
     model = build_model(cfg)
     shape = ShapeSpec("cli", "train", args.seq, args.batch)
     data = SyntheticLM(cfg, shape, n_workers=args.workers, seed=args.seed)
+    faults = (parse_faults(args.faults, args.workers, seed=args.seed)
+              if args.faults else None)
     tcfg = TrainerConfig(
         n_workers=args.workers, beta=args.beta, w2s=args.w2s, s2w=args.s2w,
         remat=False, use_pallas=False, metrics=args.metrics_out is not None,
-        trace_spans=args.trace_spans)
+        trace_spans=args.trace_spans, participation=args.participation,
+        participation_seed=args.participation_seed, faults=faults)
     tr = Trainer(model, tcfg)
     state = tr.init(jax.random.key(args.seed))
     start = 0
@@ -137,6 +149,8 @@ def main():
                 row = {"step": i, "loss": round(float(aux["loss"]), 4),
                        "radius": round(float(sched(i)), 5),
                        "wall_s": round(time.time() - t0, 1)}
+                if "n_participants" in aux:
+                    row["n_participants"] = int(aux["n_participants"])
                 print(json.dumps(row), flush=True)
                 if writer is not None:
                     last_metrics = aux["metrics"].host_floats()

@@ -39,6 +39,8 @@ import queue
 import subprocess
 import sys
 import threading
+import time
+import warnings
 
 SCHEMA = "repro.metrics/v1"
 
@@ -211,12 +213,23 @@ class MetricsWriter:
     ``flush_every`` bounds the records buffered before an fsync-free
     file flush; close() drains the queue. ``append=True`` (the dry-run's
     resumable log) skips the manifest unless one is passed explicitly.
+
+    Transient ``OSError`` during the drain (full disk, flaky NFS) is
+    retried ``write_retries`` times with exponential backoff starting at
+    ``retry_backoff_s``; a record that still fails is DROPPED and counted
+    in ``self.dropped`` — a flaky sink degrades to a lossy one instead of
+    silently killing the drain thread (close() warns, never raises, on
+    drops). Non-OSError failures keep the old surface-on-close contract.
     """
 
     def __init__(self, path: str, manifest: dict | None = None,
-                 flush_every: int = 20, append: bool = False):
+                 flush_every: int = 20, append: bool = False,
+                 write_retries: int = 3, retry_backoff_s: float = 0.05):
         self.path = path
         self.flush_every = max(1, int(flush_every))
+        self.write_retries = max(0, int(write_retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.dropped = 0
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
@@ -244,6 +257,22 @@ class MetricsWriter:
         self._queue.put(rec)
 
     # -- consumer side
+    def _write_one(self, rec: dict) -> bool:
+        """One record with bounded retry on transient OSError; returns
+        False when the record was dropped (retries exhausted)."""
+        delay = self.retry_backoff_s
+        for attempt in range(self.write_retries + 1):
+            try:
+                self._file.write(json.dumps(rec) + "\n")
+                return True
+            except OSError:
+                if attempt == self.write_retries:
+                    self.dropped += 1
+                    return False
+                time.sleep(delay)
+                delay *= 2
+        return False   # unreachable
+
     def _drain(self) -> None:
         pending = 0
         while True:
@@ -251,10 +280,13 @@ class MetricsWriter:
             if rec is None:
                 break
             try:
-                self._file.write(json.dumps(rec) + "\n")
-                pending += 1
+                if self._write_one(rec):
+                    pending += 1
                 if pending >= self.flush_every or self._queue.empty():
-                    self._file.flush()
+                    try:
+                        self._file.flush()
+                    except OSError:
+                        pass   # flush retries implicitly on next record
                     pending = 0
             except Exception as e:   # surface on close, never in-loop
                 self._err.append(e)
@@ -270,8 +302,16 @@ class MetricsWriter:
         self._closed = True
         self._queue.put(None)
         self._thread.join(timeout=10)
-        self._file.flush()
+        try:
+            self._file.flush()
+        except OSError:
+            pass
         self._file.close()
+        if self.dropped:
+            warnings.warn(
+                f"MetricsWriter dropped {self.dropped} record(s) to "
+                f"{self.path} after {self.write_retries} retries",
+                RuntimeWarning, stacklevel=2)
         if self._err:
             raise self._err[0]
 

@@ -5,16 +5,45 @@ exactly. Works for resuming training (examples) and for exporting served
 weights. Multi-host note: on a real slice each host saves its addressable
 shards under a host suffix; on CPU there is one host, so this degenerates
 to a single file.
+
+Robustness (DESIGN.md §11): a checkpoint is only useful if the run that
+reads it back can trust it after a mid-write crash or disk corruption.
+
+  * ``save_checkpoint`` writes to a temp file in the target directory and
+    publishes with ``os.replace`` — the atomic-rename pattern, so the
+    target path only ever holds a complete file. A pre-existing
+    checkpoint is rotated to ``<path>.prev`` first (same-directory
+    rename, also atomic), keeping exactly one last-good generation.
+  * The archive embeds a ``__manifest__`` JSON entry with a per-array
+    CRC32 + shape + dtype; ``load_checkpoint`` re-hashes every array and
+    refuses silently-corrupted data, not just truncated zips.
+  * On any load failure (missing entry, bad zip, checksum mismatch)
+    ``load_checkpoint`` falls back to ``<path>.prev`` with a warning
+    before giving up — a torn newest generation costs one checkpoint
+    interval, not the run.
+
+Pre-manifest checkpoints (older runs) still load: the checksum pass is
+skipped when the archive has no ``__manifest__`` entry.
 """
 from __future__ import annotations
 
+import json
 import os
+import warnings
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 from repro.obs.trace import span
+
+_MANIFEST_KEY = "__manifest__"
+_STEP_KEY = "__step__"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is unreadable or fails its checksum manifest."""
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
@@ -29,22 +58,90 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
     return out
 
 
+def _npz_path(path: str) -> str:
+    # np.savez historically appended ".npz" to bare paths; keep that
+    # contract so existing --checkpoint values resolve to the same file
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _checksum(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _build_manifest(flat: dict[str, np.ndarray]) -> str:
+    return json.dumps({
+        k: {"crc32": _checksum(v), "shape": list(v.shape),
+            "dtype": str(v.dtype)}
+        for k, v in flat.items()})
+
+
 def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
     with span("ckpt/save"):
         flat = _flatten(tree)
         if step is not None:
-            flat["__step__"] = np.asarray(step)
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        np.savez(path, **flat)
+            flat[_STEP_KEY] = np.asarray(step)
+        manifest = _build_manifest(flat)
+        flat[_MANIFEST_KEY] = np.frombuffer(
+            manifest.encode(), dtype=np.uint8).copy()
+        final = _npz_path(path)
+        os.makedirs(os.path.dirname(final) or ".", exist_ok=True)
+        # temp file in the same directory => os.replace stays a same-
+        # filesystem atomic rename; a crash mid-save leaves the previous
+        # generation at `final` untouched
+        tmp = final + ".tmp"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                os.replace(final, final + ".prev")
+            os.replace(tmp, final)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+
+
+def _read_verified(path: str) -> dict[str, np.ndarray]:
+    """Load + checksum-verify one npz; raises CheckpointError."""
+    try:
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+    except Exception as e:  # bad zip / truncation / unreadable entry
+        raise CheckpointError(f"{path}: unreadable checkpoint: {e}") from e
+    raw = flat.pop(_MANIFEST_KEY, None)
+    if raw is None:
+        return flat    # pre-manifest checkpoint: nothing to verify
+    try:
+        manifest = json.loads(raw.tobytes().decode())
+    except Exception as e:
+        raise CheckpointError(f"{path}: corrupt manifest: {e}") from e
+    if set(manifest) != set(flat):
+        raise CheckpointError(
+            f"{path}: manifest/content key mismatch: "
+            f"{sorted(set(manifest) ^ set(flat))[:4]}")
+    for k, ent in manifest.items():
+        if _checksum(flat[k]) != ent["crc32"]:
+            raise CheckpointError(f"{path}: checksum mismatch on {k!r}")
+    return flat
 
 
 def load_checkpoint(path: str, like: Any) -> tuple[Any, int | None]:
     """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs)."""
+    ShapeDtypeStructs). Falls back to ``<path>.prev`` if the newest
+    generation is torn/corrupt; raises CheckpointError if both fail."""
     with span("ckpt/load"):
-        with np.load(path) as data:
-            flat = {k: data[k] for k in data.files}
-        step = int(flat.pop("__step__")) if "__step__" in flat else None
+        final = _npz_path(path) if not os.path.exists(path) else path
+        try:
+            flat = _read_verified(final)
+        except CheckpointError as e:
+            prev = final + ".prev"
+            if not os.path.exists(prev):
+                raise
+            warnings.warn(f"{e}; falling back to last-good {prev}",
+                          RuntimeWarning, stacklevel=2)
+            flat = _read_verified(prev)
+        step = int(flat.pop(_STEP_KEY)) if _STEP_KEY in flat else None
 
         def rebuild(sub: Any, prefix: str = ""):
             if isinstance(sub, dict):

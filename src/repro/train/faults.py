@@ -1,0 +1,184 @@
+"""Deterministic fault injection for chaos runs (DESIGN.md §11).
+
+A ``FaultPlan`` is a *seeded, declared* schedule of production failure
+modes, injected inside the jitted step so a single A/B switch proves the
+elastic-participation machinery end-to-end:
+
+  ``drop``       worker j is absent for steps [start, stop) — ANDed into
+                 the participation mask (``drop_mask``), so its EF21
+                 error/momentum state freezes exactly like a scheduled
+                 absence;
+  ``nan``/``inf`` worker j's gradient for one (seeded-chosen) parameter
+                 leaf is poisoned with NaN/Inf for steps [start, stop) —
+                 the poison flows through momentum into the payload,
+                 where the optimizer's non-finite guard demotes the
+                 worker for the step;
+  ``flip``       XOR a seeded set of byte positions of the gathered w2s
+                 u8 wire buffer for steps [start, stop) — a torn/corrupt
+                 wire payload. Bit flips that produce NaN/Inf floats are
+                 caught by the guard; flips that decode to finite garbage
+                 are absorbed by the EF21 feedback loop (that is the
+                 claim the chaos tests pin).
+
+Everything is static except the step comparison: fault sites (leaf
+choice, byte positions, XOR masks) are drawn once from a
+``numpy.random.Generator(seed)`` at plan-build time, and each injection
+lowers to a ``jnp.where(step_in_range, faulty, clean)`` — the compiled
+program is identical across steps and the schedule is exactly
+reproducible (and resume-stable).
+
+CLI grammar (``parse_faults``), comma-separated clauses:
+
+    drop:w=1:steps=5-10          worker 1 absent for steps 5..9
+    nan:w=0:steps=7              NaN gradient leaf on worker 0 at step 7
+    inf:w=2:steps=3-6            Inf gradient leaf, worker 2, steps 3..5
+    flip:steps=4:bits=8          8 flipped wire bytes at step 4
+
+``steps=a-b`` is the half-open range [a, b); ``steps=a`` means [a, a+1).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_CLAUSE_RE = re.compile(r"^(drop|nan|inf|flip)((?::[a-z_]+=[0-9-]+)*)$")
+
+
+@dataclass(frozen=True)
+class GradFault:
+    worker: int
+    start: int
+    stop: int
+    mode: str           # "nan" | "inf"
+    leaf_id: int = -1   # resolved lazily from the seed when < 0
+
+
+@dataclass(frozen=True)
+class DropFault:
+    worker: int
+    start: int
+    stop: int
+
+
+@dataclass(frozen=True)
+class WireFault:
+    start: int
+    stop: int
+    n_bits: int = 8     # byte positions XORed per injection
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, declared fault schedule — see module docstring."""
+    n_workers: int
+    seed: int = 0
+    drops: tuple = ()        # DropFault...
+    grad_faults: tuple = ()  # GradFault...
+    wire_faults: tuple = ()  # WireFault...
+
+    def __post_init__(self):
+        for f in self.drops + self.grad_faults:
+            if not 0 <= f.worker < self.n_workers:
+                raise ValueError(
+                    f"fault worker {f.worker} out of range "
+                    f"[0, {self.n_workers})")
+        for f in self.drops + self.grad_faults + self.wire_faults:
+            if f.stop <= f.start:
+                raise ValueError(f"empty fault step range "
+                                 f"[{f.start}, {f.stop})")
+
+    # ------------------------------------------------------------- drops
+    def drop_mask(self, step):
+        """``[n_workers]`` bool, False where a drop fault is active at
+        ``step`` (ANDed into the participation mask by the optimizer)."""
+        step = jnp.asarray(step, jnp.int32)
+        mask = jnp.ones((self.n_workers,), jnp.bool_)
+        for f in self.drops:
+            active = (step >= f.start) & (step < f.stop)
+            mask = mask & ~(active
+                            & (jnp.arange(self.n_workers) == f.worker))
+        return mask
+
+    # ----------------------------------------------------------- grads
+    def inject_grads(self, grads, step):
+        """Poison the scheduled gradient leaves of the worker-lead grads
+        tree (leaves ``[n_workers, ...]``). The faulty leaf index is
+        drawn from the plan seed per fault — deterministic, but not
+        hand-picked, so the guard is exercised on arbitrary leaves."""
+        if not self.grad_faults:
+            return grads
+        step = jnp.asarray(step, jnp.int32)
+        leaves, treedef = jax.tree.flatten(grads)
+        rng = np.random.default_rng(self.seed)
+        for f in self.grad_faults:
+            lid = f.leaf_id if f.leaf_id >= 0 \
+                else int(rng.integers(len(leaves)))
+            g = leaves[lid]
+            active = (step >= f.start) & (step < f.stop)
+            poison = jnp.asarray(
+                np.nan if f.mode == "nan" else np.inf, g.dtype)
+            wsel = jnp.arange(g.shape[0]) == f.worker
+            sel = active & wsel.reshape((-1,) + (1,) * (g.ndim - 1))
+            leaves[lid] = jnp.where(sel, poison, g)
+        return treedef.unflatten(leaves)
+
+    # ------------------------------------------------------------ wire
+    def inject_wire(self, buf, step, stage: int = 0,
+                    direction: str = "w2s"):
+        """XOR seeded byte positions of a gathered u8 wire (sub-)buffer
+        when a wire fault is active. Positions/masks are drawn per
+        (fault, stage, direction) so staged arms corrupt independent
+        sites; clamped to the buffer's byte dim."""
+        if not self.wire_faults or direction != "w2s" \
+                or buf.dtype != jnp.uint8:
+            return buf
+        step = jnp.asarray(step, jnp.int32)
+        nbytes = buf.shape[-1]
+        for fi, f in enumerate(self.wire_faults):
+            rng = np.random.default_rng(
+                (self.seed, fi, stage, 0 if direction == "w2s" else 1))
+            n = min(f.n_bits, nbytes)
+            pos = rng.choice(nbytes, size=n, replace=False)
+            xor = rng.integers(1, 256, size=n).astype(np.uint8)
+            flipped = buf.at[..., pos].set(
+                buf[..., pos] ^ jnp.asarray(xor, jnp.uint8))
+            active = (step >= f.start) & (step < f.stop)
+            buf = jnp.where(active, flipped, buf)
+        return buf
+
+    def active_any(self, step):
+        """Scalar bool: any declared fault active at ``step``."""
+        step = jnp.asarray(step, jnp.int32)
+        out = jnp.asarray(False)
+        for f in self.drops + self.grad_faults + self.wire_faults:
+            out = out | ((step >= f.start) & (step < f.stop))
+        return out
+
+
+def parse_faults(spec: str, n_workers: int, seed: int = 0) -> FaultPlan:
+    """Parse the CLI fault grammar (module docstring) into a FaultPlan."""
+    drops, grads, wires = [], [], []
+    for clause in [c.strip() for c in spec.split(",") if c.strip()]:
+        m = _CLAUSE_RE.match(clause)
+        if not m:
+            raise ValueError(f"bad fault clause {clause!r}")
+        kind = m.group(1)
+        kv = dict(p.split("=", 1) for p in m.group(2).split(":") if p)
+        if "steps" not in kv:
+            raise ValueError(f"fault clause {clause!r} needs steps=a[-b]")
+        a, _, b = kv["steps"].partition("-")
+        start, stop = int(a), (int(b) if b else int(a) + 1)
+        if kind == "drop":
+            drops.append(DropFault(int(kv["w"]), start, stop))
+        elif kind in ("nan", "inf"):
+            grads.append(GradFault(int(kv["w"]), start, stop, kind,
+                                   leaf_id=int(kv.get("leaf", -1))))
+        else:  # flip
+            wires.append(WireFault(start, stop,
+                                   n_bits=int(kv.get("bits", 8))))
+    return FaultPlan(n_workers=n_workers, seed=seed, drops=tuple(drops),
+                     grad_faults=tuple(grads), wire_faults=tuple(wires))

@@ -64,6 +64,18 @@ class TrainerConfig:
                                # (§10); off arm lowers identically
     trace_spans: bool = False  # named-scope the phases + wire stages
                                # (§10) for xprof; off = no HLO change
+    participation: Any = "full"  # elastic worker participation (§11):
+                                 # "full" | "bernoulli(p)" |
+                                 # "round_robin(k)" | Explicit masks;
+                                 # "full" is the bit-equal arm
+    participation_seed: int = 0  # seeds bernoulli participation
+    nonfinite_guard: Any = "auto"  # payload finiteness guard (§11):
+                                   # "auto" = on iff participation is
+                                   # elastic or faults are declared
+    faults: Any = None         # train.faults.FaultPlan — seeded chaos
+                               # schedule (drops / NaN grads / wire bit
+                               # flips) injected inside the step (§11);
+                               # forces the guard on
 
 
 class Trainer:
@@ -71,13 +83,21 @@ class Trainer:
         self.model = model
         self.tcfg = tcfg
         self.mesh = mesh
+        guard = tcfg.nonfinite_guard
+        if guard == "auto":
+            # chaos implies the guard: any declared faults or an elastic
+            # schedule turn it on; the plain arm stays bit-equal (§11)
+            guard = tcfg.faults is not None or tcfg.participation != "full"
         self.opt = EF21Muon(EF21MuonConfig(
             n_workers=tcfg.n_workers, beta=tcfg.beta, w2s=tcfg.w2s,
             s2w=tcfg.s2w, ns_steps=tcfg.ns_steps,
             use_pallas=tcfg.use_pallas, wire_pack=tcfg.wire_pack,
             ns_bucketing=tcfg.ns_bucketing, wire_stages=tcfg.wire_stages,
             wire_pack_s2w=tcfg.wire_pack_s2w, metrics=tcfg.metrics,
-            trace_spans=tcfg.trace_spans))
+            trace_spans=tcfg.trace_spans,
+            participation=tcfg.participation,
+            participation_seed=tcfg.participation_seed,
+            nonfinite_guard=bool(guard)))
         # metas are static: build once from the model's abstract init
         from repro.models.api import abstract_params
         self._params_shapes, self.metas = abstract_params(model)
@@ -167,7 +187,8 @@ class Trainer:
         # the per-leaf TP/zero-1 shardings at the concat)
         opt_step = self.opt.make_step(self.metas, reshard_payloads=reshard,
                                       mesh=self.mesh, fsdp=self.tcfg.fsdp,
-                                      reshard_updates=broadcast_updates)
+                                      reshard_updates=broadcast_updates,
+                                      faults=self.tcfg.faults)
 
         def step(state, batch, t):
             return opt_step(state, self._grad_and_loss, batch, t)

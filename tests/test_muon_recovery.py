@@ -109,6 +109,66 @@ def test_wire_byte_accounting(key):
     assert opt_id.w2s_bytes_per_worker(params, metas) == dense
 
 
+def _hetero_quadratic(key, n_workers=4, dim=16):
+    Ts = jax.random.normal(key, (n_workers, dim, dim))
+
+    def gal(p, wb):
+        t = Ts[jnp.int32(wb[0])]
+        return 0.5 * jnp.sum((p - t) ** 2), (p - t)
+
+    metas = ParamMeta("spectral", 1.0, 0)
+    params = jnp.zeros((dim, dim))
+    batch = jnp.arange(float(n_workers)).reshape(n_workers, 1)
+    return params, metas, gal, batch
+
+
+def test_participation_full_bit_equal(key):
+    """participation='full' (the default robustness-off arm) is VALUE-
+    BIT-EQUAL to the pre-participation step: the elastic path is only
+    built when something can actually mask (§11)."""
+    params, metas, gal, batch = _hetero_quadratic(key)
+    base = EF21Muon(EF21MuonConfig(n_workers=4, beta=0.5, w2s="top10",
+                                   use_pallas=False))
+    full = EF21Muon(EF21MuonConfig(n_workers=4, beta=0.5, w2s="top10",
+                                   use_pallas=False, participation="full"))
+    s_a = base.init(key, params, metas)
+    s_b = full.init(key, params, metas)
+    step_a = jax.jit(lambda s, b: base.make_step(metas)(s, gal, b, 0.05))
+    step_b = jax.jit(lambda s, b: full.make_step(metas)(s, gal, b, 0.05))
+    for _ in range(4):
+        s_a, _ = step_a(s_a, batch)
+        s_b, _ = step_b(s_b, batch)
+    for a, b in zip(jax.tree.leaves(s_a), jax.tree.leaves(s_b)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_frozen_worker_ef21_state(key):
+    """A non-participating worker's EF21 error state e_t (g_w row),
+    momentum and compressor state are BITWISE unchanged across the step
+    (the Gluon-FL partial-participation contraction needs this), while
+    participants' rows do move and the server fold uses the dynamic
+    participant count."""
+    from repro.dist.participation import Explicit
+    params, metas, gal, batch = _hetero_quadratic(key)
+    opt = EF21Muon(EF21MuonConfig(
+        n_workers=4, beta=0.5, w2s="top10", use_pallas=False,
+        participation=Explicit(((1, 1, 0, 1),))))  # worker 2 always out
+    state = opt.init(key, params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas)(s, gal, b, 0.05))
+    # one warm step so g_w/m_w are non-trivial before the invariant check
+    state, _ = step(state, batch)
+    g_before = np.asarray(state["g_w"][2])
+    m_before = np.asarray(state["m_w"][2])
+    new, aux = step(state, batch)
+    assert np.array_equal(np.asarray(new["g_w"][2]), g_before)
+    assert np.array_equal(np.asarray(new["m_w"][2]), m_before)
+    assert int(aux["n_participants"]) == 3
+    assert not bool(aux["skipped"])
+    # a participating worker's EF21 state does advance
+    assert not np.array_equal(np.asarray(new["g_w"][0]),
+                              np.asarray(state["g_w"][0]))
+
+
 def test_ef21p_s2w_compression_runs(key):
     """Bidirectional: EF21-P model-shift compression (s2w) keeps W state
     and still converges."""

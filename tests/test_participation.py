@@ -1,0 +1,301 @@
+"""Elastic participation + fault injection (DESIGN.md §11).
+
+Schedule algebra (dist/participation.py), the FaultPlan grammar and
+injectors (train/faults.py), and the optimizer-level degradation
+semantics: guard demotion, skip-step fallback, chaos-run finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.muon import EF21Muon, EF21MuonConfig, ParamMeta
+from repro.dist.participation import (Explicit, mask_bcast,
+                                      participation_mask,
+                                      payload_finite_mask, validate_spec)
+from repro.train.faults import (DropFault, FaultPlan, GradFault, WireFault,
+                                parse_faults)
+
+
+# ----------------------------------------------------------- schedules
+
+def test_full_schedule_is_all_ones():
+    for step in (0, 7):
+        m = participation_mask("full", 4, step)
+        assert m.shape == (4,) and bool(jnp.all(m))
+
+
+def test_round_robin_rotates_and_covers():
+    n, k = 5, 2
+    seen = np.zeros(n, int)
+    for step in range(n):
+        m = np.asarray(participation_mask(f"round_robin({k})", n, step))
+        assert m.sum() == k
+        seen += m
+    assert (seen == k).all()   # every worker participates k/n of steps
+
+
+def test_round_robin_full_window_is_all_ones():
+    m = participation_mask("round_robin(4)", 4, 3)
+    assert bool(jnp.all(m))
+
+
+def test_bernoulli_deterministic_and_step_varying():
+    a = np.asarray(participation_mask("bernoulli(0.5)", 8, 3, seed=1))
+    b = np.asarray(participation_mask("bernoulli(0.5)", 8, 3, seed=1))
+    assert (a == b).all()    # same (spec, seed, step) => same mask
+    masks = [np.asarray(participation_mask("bernoulli(0.5)", 8, s, seed=1))
+             for s in range(16)]
+    assert any(not (m == masks[0]).all() for m in masks[1:])
+
+
+def test_explicit_table_cycles():
+    spec = Explicit(((1, 0), (0, 1)))
+    m0 = np.asarray(participation_mask(spec, 2, 0))
+    m2 = np.asarray(participation_mask(spec, 2, 2))
+    assert (m0 == [True, False]).all() and (m0 == m2).all()
+    assert (np.asarray(participation_mask(spec, 2, 1))
+            == [False, True]).all()
+
+
+def test_participation_mask_traced_step():
+    f = jax.jit(lambda s: participation_mask("round_robin(1)", 3, s))
+    assert np.asarray(f(2)).sum() == 1
+
+
+@pytest.mark.parametrize("bad", [
+    "bernoulli(0)", "bernoulli(1.5)", "round_robin(0)", "round_robin(9)",
+    "nonsense", 42])
+def test_validate_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        validate_spec(bad, 4)
+
+
+def test_validate_spec_explicit_width_mismatch():
+    with pytest.raises(ValueError):
+        validate_spec(Explicit(((1, 1),)), 4)
+    with pytest.raises(ValueError):
+        Explicit(())
+    with pytest.raises(ValueError):
+        Explicit(((1, 0), (1,)))
+
+
+def test_payload_finite_mask_flags_only_bad_worker():
+    pl = [{"values": jnp.ones((3, 4)).at[1, 2].set(jnp.nan),
+           "indices": jnp.zeros((3, 4), jnp.int32)}]
+    m = np.asarray(payload_finite_mask(pl, 3))
+    assert (m == [True, False, True]).all()
+    # integer leaves are never checked (can't encode NaN)
+    pl_int = [{"codes": jnp.full((3, 4), 255, jnp.int32)}]
+    assert np.asarray(payload_finite_mask(pl_int, 3)).all()
+
+
+def test_mask_bcast_shape():
+    m = jnp.array([True, False])
+    assert mask_bcast(m, 3).shape == (2, 1, 1)
+
+
+# ---------------------------------------------------------- fault plan
+
+def test_parse_faults_grammar():
+    plan = parse_faults(
+        "drop:w=1:steps=5-10,nan:w=0:steps=7,inf:w=2:steps=3-6,"
+        "flip:steps=4:bits=16", n_workers=4, seed=3)
+    assert plan.drops == (DropFault(1, 5, 10),)
+    assert plan.grad_faults == (GradFault(0, 7, 8, "nan"),
+                                GradFault(2, 3, 6, "inf"))
+    assert plan.wire_faults == (WireFault(4, 5, n_bits=16),)
+
+
+@pytest.mark.parametrize("bad", [
+    "drop:w=9:steps=1", "drop:w=1", "nan:w=0:steps=5-5", "bogus:steps=1"])
+def test_parse_faults_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_faults(bad, n_workers=4)
+
+
+def test_drop_mask_window():
+    plan = FaultPlan(n_workers=3, drops=(DropFault(1, 2, 4),))
+    assert np.asarray(plan.drop_mask(1)).all()
+    assert (np.asarray(plan.drop_mask(2)) == [True, False, True]).all()
+    assert np.asarray(plan.drop_mask(4)).all()
+
+
+def test_inject_grads_poisons_one_worker_row():
+    plan = FaultPlan(n_workers=2, seed=0,
+                     grad_faults=(GradFault(1, 0, 2, "nan", leaf_id=0),))
+    g = {"a": jnp.ones((2, 3))}
+    out = plan.inject_grads(g, 0)
+    assert bool(jnp.all(jnp.isnan(out["a"][1])))
+    assert bool(jnp.all(out["a"][0] == 1.0))
+    # outside the window: untouched
+    assert bool(jnp.all(out["a"][0] == plan.inject_grads(g, 5)["a"][0]))
+    assert not bool(jnp.any(jnp.isnan(plan.inject_grads(g, 5)["a"])))
+
+
+def test_inject_wire_flips_bytes_deterministically():
+    plan = FaultPlan(n_workers=2, seed=1,
+                     wire_faults=(WireFault(3, 4, n_bits=4),))
+    buf = jnp.zeros((2, 64), jnp.uint8)
+    a = np.asarray(plan.inject_wire(buf, 3))
+    b = np.asarray(plan.inject_wire(buf, 3))
+    assert (a == b).all()
+    assert (a != 0).sum() == 2 * 4        # 4 positions, both worker rows
+    assert (np.asarray(plan.inject_wire(buf, 2)) == 0).all()  # inactive
+    # non-u8 / s2w buffers pass through untouched
+    fbuf = jnp.ones((2, 8), jnp.float32)
+    assert plan.inject_wire(fbuf, 3) is fbuf
+    assert plan.inject_wire(buf, 3, 0, "s2w") is buf
+
+
+# ------------------------------------------- optimizer-level semantics
+
+def _hetero(key, n_w=4, dim=16):
+    Ts = jax.random.normal(key, (n_w, dim, dim))
+
+    def gal(p, wb):
+        t = Ts[jnp.int32(wb[0])]
+        return 0.5 * jnp.sum((p - t) ** 2), (p - t)
+
+    return (jnp.zeros((dim, dim)), ParamMeta("spectral", 1.0, 0), gal,
+            jnp.arange(float(n_w)).reshape(n_w, 1), Ts)
+
+
+def _assert_state_finite(state):
+    for lf in jax.tree.leaves(state):
+        if jnp.issubdtype(lf.dtype, jnp.inexact):
+            assert bool(jnp.all(jnp.isfinite(lf)))
+
+
+def test_guard_demotes_nan_worker_and_stays_finite(key):
+    params, metas, gal, batch, _ = _hetero(key)
+    plan = FaultPlan(n_workers=4,
+                     grad_faults=(GradFault(0, 2, 40, "nan"),))
+    opt = EF21Muon(EF21MuonConfig(n_workers=4, beta=0.5, w2s="top10",
+                                  use_pallas=False, nonfinite_guard=True))
+    state = opt.init(key, params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas, faults=plan)(
+        s, gal, b, 0.05))
+    for i in range(10):
+        g_poisoned = np.asarray(state["g_w"][0])
+        state, aux = step(state, batch)
+        assert np.isfinite(float(aux["loss"]))
+        if 2 <= i < 40:
+            # demoted: the poisoned worker's EF21 state froze
+            assert int(aux["n_participants"]) == 3
+            assert np.array_equal(np.asarray(state["g_w"][0]), g_poisoned)
+    _assert_state_finite(state)
+
+
+def test_all_poisoned_skips_step(key):
+    params, metas, gal, batch, _ = _hetero(key)
+    plan = FaultPlan(n_workers=4, grad_faults=tuple(
+        GradFault(w, 2, 4, "nan") for w in range(4)))
+    opt = EF21Muon(EF21MuonConfig(n_workers=4, beta=0.5, w2s="top10",
+                                  use_pallas=False, nonfinite_guard=True))
+    state = opt.init(key, params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas, faults=plan)(
+        s, gal, b, 0.05))
+    for i in range(6):
+        x_prev = np.asarray(state["x"])
+        g_prev = np.asarray(state["g_server"])
+        state, aux = step(state, batch)
+        if i in (2, 3):   # every worker poisoned -> global skip
+            assert bool(aux["skipped"])
+            assert int(aux["n_participants"]) == 0
+            assert np.array_equal(np.asarray(state["x"]), x_prev)
+            assert np.array_equal(np.asarray(state["g_server"]), g_prev)
+        else:
+            assert not bool(aux["skipped"])
+    _assert_state_finite(state)
+
+
+def test_chaos_50_steps_finite_and_converging(key):
+    """The ISSUE acceptance run: dropout + NaN/Inf grads + wire flips on
+    a declared schedule, 50 jitted steps, everything stays finite and the
+    iterate still heads toward the mean-target optimum."""
+    params, metas, gal, batch, Ts = _hetero(key)
+    plan = parse_faults(
+        "drop:w=1:steps=5-15,nan:w=0:steps=3-40,inf:w=3:steps=20-30,"
+        "flip:steps=10-12:bits=4", n_workers=4, seed=7)
+    opt = EF21Muon(EF21MuonConfig(n_workers=4, beta=0.5, w2s="top10",
+                                  use_pallas=False,
+                                  participation="bernoulli(0.75)"))
+    state = opt.init(key, params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas, faults=plan)(
+        s, gal, b, 0.05))
+    for _ in range(50):
+        state, aux = step(state, batch)
+        assert np.isfinite(float(aux["loss"]))
+    _assert_state_finite(state)
+    opt_pt = jnp.mean(Ts, axis=0)
+    err = float(jnp.linalg.norm(state["x"] - opt_pt)
+                / jnp.linalg.norm(opt_pt))
+    assert err < 0.6, f"chaos run diverged: rel err {err}"
+
+
+def test_wire_flip_absorbed_on_packed_path(key):
+    """Bit-flips on the packed w2s buffer: flips that decode to NaN are
+    demoted by the guard, finite garbage is absorbed by EF21 — either
+    way the run stays finite (wire_pack=True exercises inject_wire on
+    the real staged/monolithic buffer)."""
+    params, metas, gal, batch, _ = _hetero(key)
+    plan = FaultPlan(n_workers=4, seed=11,
+                     wire_faults=(WireFault(2, 8, n_bits=16),))
+    opt = EF21Muon(EF21MuonConfig(n_workers=4, beta=0.5, w2s="top10",
+                                  use_pallas=False, nonfinite_guard=True))
+    state = opt.init(key, params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas, faults=plan)(
+        s, gal, b, 0.05))
+    for _ in range(12):
+        state, aux = step(state, batch)
+        assert np.isfinite(float(aux["loss"]))
+    _assert_state_finite(state)
+
+
+def test_elastic_metrics_surface(key):
+    params, metas, gal, batch, _ = _hetero(key)
+    opt = EF21Muon(EF21MuonConfig(n_workers=4, beta=0.5, w2s="top10",
+                                  use_pallas=False,
+                                  participation="round_robin(3)",
+                                  metrics=True))
+    state = opt.init(key, params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas)(s, gal, b, 0.05))
+    state, aux = step(state, batch)
+    vals = aux["metrics"].host_floats()
+    assert vals["part/n_participants"] == 3.0
+    assert vals["part/demoted"] == 0.0
+    assert vals["part/skipped_step"] == 0.0
+    assert int(aux["n_participants"]) == 3
+
+
+def test_trainer_threads_participation_and_faults(key):
+    """TrainerConfig -> EF21MuonConfig plumbing: 'auto' guard resolves on
+    when faults/elastic schedules are present, off on the plain arm."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.data import SyntheticLM
+    from repro.models.api import build_model
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("nanogpt-124m").reduced()
+    model = build_model(cfg)
+    plan = parse_faults("nan:w=0:steps=2-4", 2)
+    tr = Trainer(model, TrainerConfig(
+        n_workers=2, beta=0.5, w2s="top10", remat=False, use_pallas=False,
+        participation="bernoulli(0.5)", faults=plan))
+    assert tr.opt.cfg.nonfinite_guard
+    assert tr.opt.cfg.participation == "bernoulli(0.5)"
+    plain = Trainer(model, TrainerConfig(n_workers=2, remat=False,
+                                         use_pallas=False))
+    assert not plain.opt.cfg.nonfinite_guard
+    data = SyntheticLM(cfg, ShapeSpec("t", "train", 32, 4), n_workers=2,
+                       seed=0)
+    state = tr.init(key)
+    step = jax.jit(tr.make_step())
+    losses = []
+    for i in range(6):
+        state, aux = step(state, data.batch_at(i), 0.01)
+        losses.append(float(aux["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    _assert_state_finite(state)

@@ -1,0 +1,160 @@
+"""Torn-checkpoint and flaky-sink robustness (DESIGN.md §11 satellites).
+
+Checkpoint: atomic publish (temp + rename), per-array CRC32 manifest,
+fallback to the last-good ``.prev`` generation on corruption.
+MetricsWriter: bounded retry on transient OSError, drop-with-counter
+after exhaustion — a flaky sink never kills the drain thread.
+"""
+import json
+import os
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs.sink import MetricsWriter
+from repro.train.checkpoint import (CheckpointError, load_checkpoint,
+                                    save_checkpoint)
+
+
+def _tree(v=0.0):
+    return {"a": jnp.full((4, 3), 1.5 + v), "m": None,
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32)}}
+
+
+# ----------------------------------------------------------- checkpoint
+
+def test_checkpoint_manifest_roundtrip(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, _tree(), step=3)
+    with np.load(path) as data:
+        assert "__manifest__" in data.files
+        man = json.loads(bytes(data["__manifest__"]).decode())
+    assert man["a"]["dtype"] == "float32" and man["a"]["shape"] == [4, 3]
+    out, step = load_checkpoint(path, _tree())
+    assert step == 3
+    assert np.array_equal(np.asarray(out["a"]), np.asarray(_tree()["a"]))
+    assert out["m"] is None
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_checkpoint_rotates_prev_generation(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, _tree(0.0), step=1)
+    save_checkpoint(path, _tree(9.0), step=2)
+    assert os.path.exists(path + ".prev")
+    out, step = load_checkpoint(path, _tree())
+    assert step == 2 and float(out["a"][0, 0]) == pytest.approx(10.5)
+    prev, pstep = load_checkpoint(path + ".prev", _tree())
+    assert pstep == 1 and float(prev["a"][0, 0]) == pytest.approx(1.5)
+
+
+def test_corrupt_checkpoint_falls_back_to_prev(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, _tree(0.0), step=1)
+    save_checkpoint(path, _tree(9.0), step=2)
+    with open(path, "r+b") as f:   # torn write: truncate the newest
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        out, step = load_checkpoint(path, _tree())
+    assert step == 1    # the last-good generation
+    assert float(out["a"][0, 0]) == pytest.approx(1.5)
+
+
+def test_checksum_mismatch_detected(tmp_path):
+    """Silent bit-rot that keeps the zip structure valid is caught by
+    the per-array CRC32 manifest, not just truncation."""
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, _tree(), step=1)
+    man = json.dumps({"a": {"crc32": 1, "shape": [4, 3],
+                            "dtype": "float32"}})
+    flat = {"a": np.zeros((4, 3), np.float32),
+            "__manifest__": np.frombuffer(man.encode(), np.uint8)}
+    with open(path, "wb") as f:    # forged content, stale checksum
+        np.savez(f, **flat)
+    with pytest.raises(CheckpointError, match="checksum mismatch"):
+        load_checkpoint(path, {"a": jnp.zeros((4, 3))})
+
+
+def test_both_generations_corrupt_raises(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, _tree(), step=1)
+    save_checkpoint(path, _tree(), step=2)
+    for p in (path, path + ".prev"):
+        with open(p, "wb") as f:
+            f.write(b"not a zip")
+    with pytest.raises(CheckpointError):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            load_checkpoint(path, _tree())
+
+
+def test_premanifest_checkpoint_still_loads(tmp_path):
+    """Backward compat: archives written before the manifest existed
+    (plain np.savez) load with the checksum pass skipped."""
+    path = str(tmp_path / "old.npz")
+    np.savez(path, **{"a": np.ones((2, 2)), "__step__": np.asarray(5)})
+    out, step = load_checkpoint(path, {"a": jnp.zeros((2, 2))})
+    assert step == 5 and np.asarray(out["a"]).sum() == 4.0
+
+
+# ------------------------------------------------------------- sink
+
+class _FlakyFile:
+    """File wrapper failing the first ``n_fail`` write() calls."""
+
+    def __init__(self, inner, n_fail):
+        self._inner = inner
+        self._left = n_fail
+        self.attempts = 0
+
+    def write(self, s):
+        self.attempts += 1
+        if self._left > 0:
+            self._left -= 1
+            raise OSError(28, "No space left on device")
+        return self._inner.write(s)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_sink_retries_transient_oserror(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    w = MetricsWriter(path, write_retries=3, retry_backoff_s=0.001)
+    flaky = _FlakyFile(w._file, n_fail=2)
+    w._file = flaky
+    w.write("step", step=0, loss=1.0)
+    w.close()
+    assert w.dropped == 0
+    assert flaky.attempts == 3          # 2 failures + 1 success
+    with open(path) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    assert recs and recs[-1]["loss"] == 1.0
+
+
+def test_sink_drops_with_counter_after_retries(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    w = MetricsWriter(path, write_retries=2, retry_backoff_s=0.001)
+    w._file = _FlakyFile(w._file, n_fail=10 ** 6)   # permanent failure
+    w.write("step", step=0, loss=1.0)
+    w.write("step", step=1, loss=2.0)
+    with pytest.warns(RuntimeWarning, match="dropped 2 record"):
+        w.close()                       # warns, never raises, on drops
+    assert w.dropped == 2
+
+
+def test_sink_drop_does_not_block_later_records(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    w = MetricsWriter(path, write_retries=1, retry_backoff_s=0.001)
+    w._file = _FlakyFile(w._file, n_fail=2)   # kills exactly record 1
+    w.write("step", step=0, loss=1.0)
+    w.flush()
+    w.write("step", step=1, loss=2.0)
+    with pytest.warns(RuntimeWarning):
+        w.close()
+    assert w.dropped == 1
+    with open(path) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    assert [r["step"] for r in recs] == [1]

@@ -208,9 +208,19 @@ from repro.launch.hlo_analysis import attribute_u8_directions
 mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
 cfg = get_config("granite-3-2b").reduced()
 model = build_model(cfg)
+# elastic/chaos arm (§11): same script, env-selected — the wire
+# invariants below must hold under participation < 1 and injected drops
+part = os.environ.get("REPRO_SPMD_PARTICIPATION", "full")
+fspec = os.environ.get("REPRO_SPMD_FAULTS")
+faults = None
+if fspec:
+    from repro.train.faults import parse_faults
+    faults = parse_faults(fspec, 4)
 tr = Trainer(model, TrainerConfig(n_workers=4, beta=0.5,
                                   w2s="top10+natural", s2w="natural",
-                                  use_pallas=False, remat=False), mesh=mesh)
+                                  use_pallas=False, remat=False,
+                                  participation=part, faults=faults),
+             mesh=mesh)
 shape = ShapeSpec("t", "train", 32, 8)
 data = SyntheticLM(cfg, shape, n_workers=4, seed=0)
 batch = data.batch_at(0)
@@ -260,8 +270,56 @@ print(json.dumps({
     "u8_residual_bytes": sum(int(p["bytes"]) for p in residual),
     "u8_residual_kinds": sorted({p["kind"] for p in residual}),
     "flops": a["flops"],
+    "n_participants": [int(a.get("n_participants", -1))
+                       for a in (aux1, aux2)],
+    "skipped": [bool(np.asarray(a.get("skipped", False)))
+                for a in (aux1, aux2)],
 }))
 """
+
+
+def _run_spmd_script(extra_env: dict | None = None) -> dict:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.update(extra_env or {})
+    out = subprocess.run(
+        [sys.executable, "-c", SPMD_SCRIPT], capture_output=True, text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), env=env,
+        timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _assert_wire_invariants(rec: dict) -> None:
+    """The §8/§9 staged-wire SPMD invariants — shared by the full and
+    the elastic arms (the masked fold must not change a single byte)."""
+    assert rec["coll_bytes"] > 0
+    # exactly 2K fused u8 all-gathers — one w2s gather + one s2w
+    # broadcast per pipeline stage, not one per payload leaf (the
+    # default wire_stages="auto" stages both buffers along the same NS
+    # buckets; K > 1 on this model) — each moving exactly one stage
+    # sub-buffer of one direction, byte-for-byte
+    assert rec["n_stages"] > 1, rec
+    assert len(rec["u8_gather_bytes"]) == 2 * rec["n_stages"], rec
+    assert sum(rec["stage_bytes"]) == rec["wire_bytes"], rec
+    assert sum(rec["s2w_stage_bytes"]) == rec["s2w_wire_bytes"], rec
+    assert rec["u8_gather_bytes"] == \
+        sorted(rec["stage_bytes"] + rec["s2w_stage_bytes"]), rec
+    # per-direction attribution is exact: every u8 all-gather matched
+    # one expected stage size, nothing unmatched, nothing missing
+    assert rec["split"]["w2s"] == {"bytes": rec["wire_bytes"],
+                                   "count": rec["n_stages"]}, rec
+    assert rec["split"]["s2w"] == {"bytes": rec["s2w_wire_bytes"],
+                                   "count": rec["n_stages"]}, rec
+    assert rec["split"]["unmatched_bytes"] == [], rec
+    assert rec["split"]["missing"] == {}, rec
+    # residual u8 traffic is only the TP repack of the s2w pack buffer:
+    # all-reduce kind, at most one buffer's worth, and the u8 total
+    # decomposes exactly into wire + repack
+    assert rec["u8_residual_kinds"] in ([], ["all-reduce"]), rec
+    assert rec["u8_residual_bytes"] <= rec["s2w_wire_bytes"], rec
+    assert rec["u8_bytes"] == rec["wire_bytes"] + rec["s2w_wire_bytes"] \
+        + rec["u8_residual_bytes"], rec
 
 
 @pytest.mark.slow
@@ -287,42 +345,9 @@ def test_spmd_train_step_runs_on_8_devices():
     shards), NOT the broadcast — it must stay all-reduce-kind and
     bounded by one s2w buffer. The w2s leg avoids it only because TopK
     compression already gathers in f32 upstream."""
-    env = dict(os.environ)
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run(
-        [sys.executable, "-c", SPMD_SCRIPT], capture_output=True, text=True,
-        cwd=os.path.join(os.path.dirname(__file__), ".."), env=env,
-        timeout=1200)
-    assert out.returncode == 0, out.stderr[-3000:]
-    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    rec = _run_spmd_script()
     assert np.isfinite(rec["loss1"]) and np.isfinite(rec["loss2"])
-    assert rec["coll_bytes"] > 0
-    # exactly 2K fused u8 all-gathers — one w2s gather + one s2w
-    # broadcast per pipeline stage, not one per payload leaf (the
-    # default wire_stages="auto" stages both buffers along the same NS
-    # buckets; K > 1 on this model) — each moving exactly one stage
-    # sub-buffer of one direction, byte-for-byte
-    assert rec["n_stages"] > 1, rec
-    assert len(rec["u8_gather_bytes"]) == 2 * rec["n_stages"], rec
-    assert sum(rec["stage_bytes"]) == rec["wire_bytes"], rec
-    assert sum(rec["s2w_stage_bytes"]) == rec["s2w_wire_bytes"], rec
-    assert rec["u8_gather_bytes"] == \
-        sorted(rec["stage_bytes"] + rec["s2w_stage_bytes"]), rec
-    # per-direction attribution is exact: every u8 all-gather matched
-    # one expected stage size, nothing unmatched, nothing missing
-    assert rec["split"]["w2s"] == {"bytes": rec["wire_bytes"],
-                                   "count": rec["n_stages"]}, rec
-    assert rec["split"]["s2w"] == {"bytes": rec["s2w_wire_bytes"],
-                                   "count": rec["n_stages"]}, rec
-    assert rec["split"]["unmatched_bytes"] == [], rec
-    assert rec["split"]["missing"] == {}, rec
-    # residual u8 traffic is only the TP repack of the s2w pack buffer
-    # (docstring): all-reduce kind, at most one buffer's worth, and the
-    # u8 total decomposes exactly into wire + repack
-    assert rec["u8_residual_kinds"] in ([], ["all-reduce"]), rec
-    assert rec["u8_residual_bytes"] <= rec["s2w_wire_bytes"], rec
-    assert rec["u8_bytes"] == rec["wire_bytes"] + rec["s2w_wire_bytes"] \
-        + rec["u8_residual_bytes"], rec
+    _assert_wire_invariants(rec)
     # and each direction (plus the two-way total) agrees with the
     # analytic Table-2 account (<= 1.15x)
     assert rec["wire_bytes"] <= 1.15 * rec["analytic_bytes"], rec
@@ -331,3 +356,24 @@ def test_spmd_train_step_runs_on_8_devices():
     two_way = rec["wire_bytes"] + rec["s2w_wire_bytes"]
     assert two_way <= 1.15 * two_way_analytic, rec
     assert two_way >= 0.25 * two_way_analytic, rec
+
+
+@pytest.mark.slow
+def test_spmd_elastic_worker_dropped_keeps_wire_invariants():
+    """§11 acceptance: the same 8-device SPMD step under elastic
+    participation (round_robin(3): one worker out per step) PLUS an
+    injected drop fault keeps every §8/§9 wire invariant — exactly 2K
+    static-shape u8 all-gathers, byte-for-byte equal to both staged
+    layouts — because absence is applied at fold time, never to the
+    collectives. Losses stay finite and the dynamic participant count
+    shows the mask actually bit (scheduled 3, minus the dropped worker
+    when it overlaps the window)."""
+    rec = _run_spmd_script({
+        "REPRO_SPMD_PARTICIPATION": "round_robin(3)",
+        "REPRO_SPMD_FAULTS": "drop:w=1:steps=0-2"})
+    assert np.isfinite(rec["loss1"]) and np.isfinite(rec["loss2"])
+    _assert_wire_invariants(rec)
+    # participation < 1 was really in effect: round_robin(3) keeps 3 of
+    # 4 workers; the drop fault removes worker 1 when it is scheduled
+    assert all(0 < n < 4 for n in rec["n_participants"]), rec
+    assert rec["skipped"] == [False, False], rec
