@@ -4,7 +4,6 @@ mechanism converges. Run on the 3-quadratic construction and on a tiny LM.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import TopK

@@ -10,7 +10,6 @@ bytes (Figure 1 right, Figure 2).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax

@@ -1,0 +1,13 @@
+"""Static analysis over lowered/compiled programs (DESIGN.md §12).
+
+``hlo_ir``    — the shared HLO text IR (parser + byte/shape tables) that
+                ``launch/hlo_cost.py`` and ``launch/hlo_analysis.py``
+                are built on.
+``program``   — ``ProgramArtifact``: one compiled (config, mesh, arm)
+                cell bundled with the static expectations the rules
+                check it against (wire budget, state avals, buckets).
+``rules``     — the rule registry: pure functions
+                ``ProgramArtifact -> [Finding]``.
+``baseline``  — committed-findings/hash baseline (LINT_BASELINE.json).
+``lint``      — the ``python -m repro.analysis.lint`` CLI.
+"""

@@ -1,0 +1,66 @@
+"""LINT_BASELINE.json — the committed lint baseline (DESIGN.md §12).
+
+Schema (one JSON object):
+
+    {"schema": "repro.lint-baseline/v1",
+     "jax": "<jax.__version__ at record time>",
+     "hashes": {"<cell>": "<canonical HLO hash>", ...},
+     "findings": ["<rule>|<cell>|<message>", ...]}
+
+``hashes`` feeds the lowering-drift rule and is only compared when the
+running jax version matches the recorded one (a jax upgrade legitimately
+changes every lowering; within-run arm-equality pairs are enforced
+regardless). ``findings`` is the allowlist of error/warn fingerprints
+the CLI tolerates — the committed baseline keeps it empty, so any
+finding fails CI until either the program or the baseline changes in
+the same PR.
+"""
+from __future__ import annotations
+
+import json
+
+BASELINE_SCHEMA = "repro.lint-baseline/v1"
+DEFAULT_PATH = "LINT_BASELINE.json"
+
+
+def load_baseline(path: str) -> dict:
+    """Parsed baseline, or an empty one if the file doesn't exist (the
+    first --update-baseline run bootstraps it)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return {"schema": BASELINE_SCHEMA, "jax": None, "hashes": {},
+                "findings": []}
+    if doc.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(f"{path}: unknown baseline schema "
+                         f"{doc.get('schema')!r}")
+    doc.setdefault("hashes", {})
+    doc.setdefault("findings", [])
+    return doc
+
+
+def save_baseline(path: str, hashes: dict[str, str],
+                  fingerprints: list[str]) -> dict:
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    doc = {"schema": BASELINE_SCHEMA, "jax": jax_version,
+           "hashes": dict(sorted(hashes.items())),
+           "findings": sorted(set(fingerprints))}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return doc
+
+
+def hashes_comparable(doc: dict) -> bool:
+    """Baseline hashes are only meaningful under the jax version that
+    produced them."""
+    try:
+        import jax
+        return doc.get("jax") == jax.__version__
+    except Exception:
+        return False

@@ -1,0 +1,150 @@
+"""The lint CLI (DESIGN.md §12):
+
+    PYTHONPATH=src python -m repro.analysis.lint --matrix
+    PYTHONPATH=src python -m repro.analysis.lint --configs nanogpt-124m \\
+        --arms default,donate --out results/lint.jsonl
+    PYTHONPATH=src python -m repro.analysis.lint --matrix --update-baseline
+
+Device-free: every cell compiles a reduced config on an emulated 4x2
+host mesh (``--xla_force_host_platform_device_count``), runs all rules
+over the lowered+compiled program, and diffs the findings against the
+committed ``LINT_BASELINE.json``. Exit status 1 iff any error/warn
+finding is not in the baseline allowlist — info findings (donation
+savings on non-donate arms, unrecorded hashes) only print.
+
+The matrix: every arch gets the ``default`` arm; nanogpt additionally
+runs the arms that pin config-resolution claims — ``mono``
+(wire_stages=1), ``donate``, plus two equality pairs (``full-explicit``
+and ``s2w-forced`` must lower hash-identical to ``default``, the §9/§11
+"auto resolution is the explicit arm" statements made checkable).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MATRIX_ARCHS = ("nanogpt-124m", "granite-3-2b", "deepseek-v3-671b",
+                "whisper-small")
+
+# arm name -> build_cell overrides (w2s/s2w/donate are builder kwargs,
+# the rest flow into TrainerConfig)
+ARMS: dict[str, dict] = {
+    "default": {},
+    "mono": {"wire_stages": 1},
+    "donate": {"donate": True},
+    "full-explicit": {"participation": "full", "nonfinite_guard": False},
+    "s2w-forced": {"wire_pack_s2w": True},
+}
+
+# nanogpt carries the arm sweep; the other archs pin the default arm only
+ARCH_ARMS: dict[str, tuple[str, ...]] = {
+    "nanogpt-124m": ("default", "mono", "donate", "full-explicit",
+                     "s2w-forced"),
+}
+
+# arms whose lowering is claimed bit-identical: hash-compared in-process
+EQUAL_ARMS = (("default", "full-explicit"), ("default", "s2w-forced"))
+
+
+def lint_matrix(archs, arms_filter=None, *, baseline_doc, only=None,
+                log=print):
+    """Compile each (arch, arm) cell, run the rules, and return
+    ``(findings, hashes)``. Imports jax lazily so ``ensure_host_devices``
+    in ``main`` wins the backend-init race."""
+    from repro.analysis.baseline import hashes_comparable
+    from repro.analysis.program import build_cell
+    from repro.analysis.rules import equality_findings, run_rules
+
+    ctx = {"baseline_hashes": baseline_doc.get("hashes", {}),
+           "hashes_comparable": hashes_comparable(baseline_doc)}
+    findings, hashes = [], {}
+    for arch in archs:
+        arts = {}
+        for arm in ARCH_ARMS.get(arch, ("default",)):
+            if arms_filter and arm not in arms_filter:
+                continue
+            over = ARMS[arm]
+            log(f"lint: compiling {arch}/{arm} ...")
+            art = build_cell(arch, arm, **over)
+            arts[arm] = art
+            hashes[art.cell] = art.canonical_hash
+            findings.extend(run_rules(art, ctx, only=only))
+        for a, b in EQUAL_ARMS:
+            if a in arts and b in arts:
+                findings.extend(equality_findings(arts[a], arts[b]))
+    return findings, hashes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static lint of compiled step programs (§12)")
+    ap.add_argument("--matrix", action="store_true",
+                    help="run the full default matrix "
+                         f"({', '.join(MATRIX_ARCHS)})")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated arch subset")
+    ap.add_argument("--arms", default=None,
+                    help="comma-separated arm subset "
+                         f"({', '.join(ARMS)})")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset")
+    ap.add_argument("--baseline", default="LINT_BASELINE.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline with current hashes "
+                         "(and allowlist any surviving findings)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also emit findings as schema-versioned JSONL "
+                         "(obs.sink kind=lint)")
+    args = ap.parse_args(argv)
+
+    if not args.matrix and not args.configs:
+        ap.error("pick --matrix or --configs")
+    archs = (args.configs.split(",") if args.configs
+             else list(MATRIX_ARCHS))
+    arms_filter = set(args.arms.split(",")) if args.arms else None
+    only = set(args.rules.split(",")) if args.rules else None
+
+    # before any jax backend init: the matrix needs 8 emulated devices
+    from repro.launch.dryrun import ensure_host_devices
+    ensure_host_devices(8)
+
+    from repro.analysis.baseline import load_baseline, save_baseline
+
+    baseline_doc = load_baseline(args.baseline)
+    findings, hashes = lint_matrix(archs, arms_filter,
+                                   baseline_doc=baseline_doc, only=only)
+
+    if args.out:
+        from repro.obs.sink import MetricsWriter
+        with MetricsWriter(args.out) as w:
+            for f in findings:
+                w.write("lint", **f.to_record())
+
+    allow = set(baseline_doc.get("findings", []))
+    new = [f for f in findings
+           if f.level in ("error", "warn") and f.fingerprint not in allow]
+    for f in findings:
+        tag = ("baselined" if f.fingerprint in allow
+               else f.level)
+        print(f"[{tag:9s}] {f.rule:15s} {f.cell:32s} {f.message}")
+        if f.data and f in new:
+            print(f"{'':11s}{json.dumps(f.data, default=str)[:200]}")
+    print(f"lint: {len(findings)} finding(s) over {len(hashes)} cell(s); "
+          f"{len(new)} not in baseline")
+
+    if args.update_baseline:
+        # record what fires *now* — keeps still-live allowlist entries
+        # (updating after a green run must not wipe them) and prunes
+        # entries that stopped firing
+        save_baseline(args.baseline, hashes,
+                      [f.fingerprint for f in findings
+                       if f.level in ("error", "warn")])
+        print(f"lint: baseline written to {args.baseline}")
+        return 0
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

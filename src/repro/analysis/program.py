@@ -1,0 +1,299 @@
+"""ProgramArtifact — one compiled (config, mesh, arm) cell plus the
+static expectations the lint rules check it against (DESIGN.md §12).
+
+The artifact bundles the compiled per-device HLO text with everything a
+rule needs that the text alone cannot provide: the resolved
+:class:`~repro.core.muon.WireBudget` (expected u8 collective
+population), the optimizer-state avals on both sides of the step (dtype
+drift), the NS bucket shapes and their expected per-device shards
+(replication audit), and the donation flag the jit boundary was built
+with. Rules stay pure functions ``ProgramArtifact -> [Finding]`` — they
+never compile anything themselves, so seeded-violation tests can feed
+them hand-written HLO.
+
+``build_cell`` is the matrix builder: it lowers + compiles one reduced
+config on an emulated host mesh through the exact ``Trainer.jit_step``
+entry point the dry-run uses (device-free: run under
+``--xla_force_host_platform_device_count``).
+
+``canonical_hlo`` rewrites a module dump into a form stable across
+recompiles of the same program: SSA value names are renumbered by first
+appearance and ``metadata={...}`` operand annotations (op names +
+source paths — machine-specific) are dropped. Its sha256 is the
+lowering-drift fingerprint.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+import re
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Any
+
+from repro.analysis import hlo_ir
+
+# ----------------------------------------------------------- canonical HLO
+
+_SSA_RE = re.compile(r"%[\w.\-]+")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _strip_attr(text: str, key: str) -> str:
+    """Remove every ``key={...}`` attribute (balanced braces, quote-aware
+    — op_name strings may contain arbitrary punctuation)."""
+    needle = key + "={"
+    out = []
+    i = 0
+    while True:
+        j = text.find(needle, i)
+        if j < 0:
+            out.append(text[i:])
+            return "".join(out)
+        out.append(text[i:j].rstrip().rstrip(","))
+        k = j + len(needle)
+        depth, quoted = 1, False
+        while k < len(text) and depth:
+            ch = text[k]
+            if quoted:
+                if ch == "\\":
+                    k += 1
+                elif ch == '"':
+                    quoted = False
+            elif ch == '"':
+                quoted = True
+            elif ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+            k += 1
+        i = k
+
+
+def canonical_hlo(text: str) -> str:
+    """The module text modulo SSA numbering and op metadata: value names
+    become ``%v<N>`` by order of first appearance, ``metadata={...}``
+    and ``/*...*/`` comments are dropped, trailing whitespace is
+    stripped. Two compiles of the same program canonicalise
+    identically; any real lowering change survives."""
+    text = _COMMENT_RE.sub("", text)
+    text = _strip_attr(text, "metadata")
+    mapping: dict[str, str] = {}
+
+    def sub(m: re.Match) -> str:
+        t = m.group(0)
+        if t not in mapping:
+            mapping[t] = f"%v{len(mapping)}"
+        return mapping[t]
+
+    return "\n".join(_SSA_RE.sub(sub, ln.rstrip())
+                     for ln in text.splitlines())
+
+
+def canonical_hash(text: str) -> str:
+    return hashlib.sha256(canonical_hlo(text).encode()).hexdigest()[:16]
+
+
+# ------------------------------------------------------------- header info
+
+def input_output_aliases(hlo_text: str) -> set[int]:
+    """Parameter numbers the module header declares input/output aliased
+    (``input_output_alias={ {out}: (param, {}, may-alias), ... }``) —
+    the buffers donation actually reuses."""
+    i = hlo_text.find("input_output_alias={")
+    if i < 0:
+        return set()
+    seg = hlo_text[i + len("input_output_alias={"):]
+    depth = 1
+    for k, ch in enumerate(seg):
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                seg = seg[:k]
+                break
+    return {int(m.group(1)) for m in re.finditer(r":\s*\((\d+)", seg)}
+
+
+def entry_param_bytes(comps: dict, entry: str | None = None) -> dict[int, int]:
+    """Per-device byte size of each entry parameter, by parameter
+    number (the compiled argument the donation audit sizes)."""
+    if entry is None:
+        entry = hlo_ir.entry_name(comps)
+    comp = comps.get(entry)
+    if comp is None:
+        return {}
+    out: dict[int, int] = {}
+    for ins in comp.instrs:
+        if hlo_ir.base_op(ins.op) == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.line)
+            if m:
+                out[int(m.group(1))] = comp.sizes.get(ins.name, 0)
+    return out
+
+
+def leaf_entries(tree: Any) -> tuple[tuple[str, tuple, str], ...]:
+    """Flatten a pytree of avals/arrays to ``(path, shape, dtype)``
+    rows, in jax's flattening order (the compiled argument order)."""
+    import jax
+
+    rows = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        rows.append((jax.tree_util.keystr(path), tuple(leaf.shape),
+                     str(leaf.dtype)))
+    return tuple(rows)
+
+
+# ---------------------------------------------------------------- artifact
+
+@dataclass(frozen=True)
+class BucketAudit:
+    """One NS bucket's stacked shape and its expected per-device shard
+    under the bucket's ``ns_bucket_pspec`` — the replication rule flags
+    dots materialising ``full_shape`` when the two differ."""
+    full_shape: tuple[int, ...]
+    sharded_shape: tuple[int, ...]
+    pspec: str = ""
+
+
+@dataclass
+class ProgramArtifact:
+    """One compiled cell of the lint matrix. Only ``cell`` and
+    ``hlo_text`` are mandatory — rules skip the checks whose
+    expectations are absent, which is how seeded-violation tests
+    isolate a single rule."""
+    cell: str                      # "arch@mesh/arm"
+    hlo_text: str
+    meta: dict = field(default_factory=dict)
+    budget: Any = None             # core.muon.WireBudget | None
+    donate: bool = False
+    state_in: tuple = ()           # ((path, shape, dtype), ...)
+    state_out: tuple = ()
+    buckets: tuple = ()            # (BucketAudit, ...)
+    n_flat_args: int | None = None  # expected compiled arg count
+
+    @cached_property
+    def comps(self) -> dict:
+        return hlo_ir.parse_module(self.hlo_text)
+
+    @cached_property
+    def cost(self) -> dict:
+        from repro.launch.hlo_cost import analyze
+
+        return analyze(self.hlo_text)
+
+    @cached_property
+    def converts(self) -> dict[tuple[str, str], tuple[int, int]]:
+        """Module-wide convert summary: (src dtype, dst dtype) ->
+        (count, max element count) across every computation (fused
+        converts included — fusion bodies are computations too)."""
+        out: dict[tuple[str, str], list[int]] = {}
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                if hlo_ir.base_op(ins.op) != "convert" or not ins.operands:
+                    continue
+                src = hlo_ir.SHAPE_RE.search(
+                    comp.types.get(ins.operands[0], ""))
+                dst = hlo_ir.SHAPE_RE.search(ins.type_str)
+                if not (src and dst):
+                    continue
+                key = (src.group(1), dst.group(1))
+                row = out.setdefault(key, [0, 0])
+                row[0] += 1
+                row[1] = max(row[1], comp.elems.get(ins.name, 0))
+        return {k: (v[0], v[1]) for k, v in out.items()}
+
+    @cached_property
+    def canonical_hash(self) -> str:
+        return canonical_hash(self.hlo_text)
+
+    @cached_property
+    def aliased_params(self) -> set[int]:
+        return input_output_aliases(self.hlo_text)
+
+
+# ------------------------------------------------------------ cell builder
+
+def _shard_dim(dim: int, entry: Any, axes: dict[str, int]) -> int:
+    if entry is None:
+        return dim
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    div = math.prod(axes.get(n, 1) for n in names)
+    return dim // div if div and dim % div == 0 else dim
+
+
+def bucket_audits(buckets, axes: dict[str, int]) -> tuple[BucketAudit, ...]:
+    """BucketAudit rows from ``plan.ns_buckets(mesh, fsdp)``: the
+    stacked ``[B, m, n]`` shape and its per-device shard under the
+    bucket's pspec (identical when the bucket is replicated)."""
+    out = []
+    for b in buckets:
+        full = (b.batch,) + tuple(b.shape)
+        spec = tuple(b.pspec) if b.pspec is not None else (None,) * 3
+        sharded = tuple(_shard_dim(d, e, axes)
+                        for d, e in zip(full, spec))
+        out.append(BucketAudit(full, sharded, str(b.pspec)))
+    return tuple(out)
+
+
+def build_cell(arch: str, arm: str = "default", *,
+               mesh_shape: tuple[int, int] = (4, 2),
+               w2s: str = "top10+natural", s2w: str = "natural",
+               seq: int = 32, batch: int = 8,
+               donate: bool = False, **tcfg_overrides) -> ProgramArtifact:
+    """Lower + compile one reduced (arch, mesh, arm) cell through the
+    real ``Trainer.jit_step`` entry point and bundle it with the
+    expectations the rules check. Device-free, but the process must
+    expose ``prod(mesh_shape)`` (emulated) devices —
+    ``launch.dryrun.ensure_host_devices`` before first jax use."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.models.api import build_model, input_specs
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    n_dev = math.prod(mesh_shape)
+    if len(jax.devices()) < n_dev:
+        raise RuntimeError(
+            f"build_cell needs {n_dev} devices, have {len(jax.devices())} "
+            "(ensure_host_devices before first jax use)")
+    mesh = Mesh(np.array(jax.devices()[:n_dev]).reshape(mesh_shape),
+                ("data", "model"))
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    n_w = mesh_shape[0]
+    tr = Trainer(model, TrainerConfig(
+        n_workers=n_w, beta=0.5, w2s=w2s, s2w=s2w, use_pallas=False,
+        remat=False, donate=donate, **tcfg_overrides), mesh=mesh)
+    shape = ShapeSpec("lint", "train", seq, batch)
+    batch_specs = input_specs(cfg, shape, n_workers=n_w)
+    state = tr.state_shapes()
+    jitted = tr.jit_step(batch_specs)
+    t_aval = jax.ShapeDtypeStruct((), jnp.float32)
+    compiled = jitted.lower(state, batch_specs, t_aval).compile()
+
+    state_out, _aux = jax.eval_shape(tr.make_step(), state, batch_specs,
+                                     t_aval)
+    plan = tr.layer_plan()
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cell = f"{arch}@{'x'.join(map(str, mesh_shape))}/{arm}"
+    n_flat = (len(jax.tree.leaves(state)) + len(jax.tree.leaves(batch_specs))
+              + 1)
+    return ProgramArtifact(
+        cell=cell,
+        hlo_text=compiled.as_text(),
+        meta={"arch": arch, "arm": arm, "mesh": dict(axes),
+              "w2s": w2s, "s2w": s2w, "donate": donate,
+              **{k: str(v) for k, v in tcfg_overrides.items()}},
+        budget=tr.wire_budget(),
+        donate=donate,
+        state_in=leaf_entries(state),
+        state_out=leaf_entries(state_out),
+        buckets=bucket_audits(
+            plan.ns_buckets(mesh=mesh, fsdp=tr.tcfg.fsdp), axes),
+        n_flat_args=n_flat)

@@ -1,0 +1,423 @@
+"""The lint rule registry (DESIGN.md §12).
+
+Every rule is a pure function ``(ProgramArtifact, ctx) -> [Finding]``
+registered under a stable name. Rules only read the artifact — they
+never compile, so seeded-violation tests can drive each one with a
+hand-written module and assert it trips exactly that rule.
+
+Rule catalog:
+
+``wire-budget``     exactly the WireBudget's u8 all-gather population,
+                    byte-for-byte per stage sub-buffer, both directions;
+                    residual u8 all-reduce bounded by one s2w buffer.
+``replication``     no large dot materialises a full NS bucket stack
+                    whose pspec says it should be sharded (the PR-3
+                    concat-drops-shardings FLOP-blowup class).
+``dtype-upcast``    no f64 anywhere, no silent u8-wire -> float widening,
+                    no state-leaf dtype drift across the step.
+``donation``        with donate=True every large state leaf is
+                    input/output aliased; without it, report the
+                    double-buffered bytes on offer.
+``host-sync``       no infeed/outfeed/send/recv or host-callback
+                    custom-calls inside the jitted step.
+``lowering-drift``  canonical HLO hash matches the committed baseline
+                    (same-jax-version only); arm pairs claimed
+                    bit-identical hash-compare via ``equality_findings``.
+
+``ctx`` keys: ``baseline_hashes`` ({cell: hash}) and
+``hashes_comparable`` (False when the baseline was recorded under a
+different jax version — drift comparisons are skipped, everything else
+still runs).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.analysis import hlo_ir
+from repro.analysis.program import ProgramArtifact, entry_param_bytes
+
+
+@dataclass
+class Finding:
+    rule: str
+    cell: str
+    level: str              # "error" | "warn" | "info"
+    message: str
+    data: dict = field(default_factory=dict)
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable identity for baselining — deliberately excludes
+        ``data`` (instruction names change across recompiles)."""
+        return f"{self.rule}|{self.cell}|{self.message}"
+
+    def to_record(self) -> dict:
+        return {"rule": self.rule, "cell": self.cell, "level": self.level,
+                "message": self.message, "data": self.data}
+
+
+RULES: dict[str, Callable] = {}
+
+
+def rule(name: str):
+    def deco(fn):
+        RULES[name] = fn
+        return fn
+    return deco
+
+
+def run_rules(art: ProgramArtifact, ctx: dict | None = None,
+              only=None) -> list[Finding]:
+    ctx = ctx or {}
+    out: list[Finding] = []
+    for name, fn in RULES.items():
+        if only is not None and name not in only:
+            continue
+        out.extend(fn(art, ctx))
+    return out
+
+
+# -------------------------------------------------------------- wire budget
+
+def wire_budget_findings(u8_pairs: list, budget, cell: str = "?"
+                         ) -> list[Finding]:
+    """The two-direction wire invariant as findings: the u8 collective
+    pair records (from ``hlo_cost.analyze``) must contain *exactly* the
+    budget's all-gather population — one gather per stage sub-buffer,
+    byte-equal, both directions — plus at most one s2w broadcast's worth
+    of model-axis u8 repack traffic (§9). Shared by the ``wire-budget``
+    rule and tests/test_sharding's SPMD assertions, so the test suite
+    and the lint CLI cannot drift apart."""
+    if budget is None or not (budget.pack_w2s or budget.pack_s2w):
+        return []
+    from repro.launch.hlo_analysis import attribute_u8_directions
+
+    # Direction gathers span the full worker group; u8 collectives over a
+    # smaller replica group are the model-axis TP repack (§9), which the
+    # partitioner is free to lower as all-reduces, sub-group all-gathers
+    # or collective-permutes (deepseek does all three). Pairs without
+    # group info (hlo_cost.analyze's records) keep the legacy behaviour:
+    # every all-gather is a direction candidate.
+    nw = getattr(budget, "n_workers", 1)
+    gathers, residual = [], []
+    for p in u8_pairs:
+        g = p.get("group")
+        if p["kind"] == "all-gather" and (g is None or nw <= 1 or g == nw):
+            gathers.append(p)
+        else:
+            residual.append(p)
+    split = attribute_u8_directions(gathers, budget.w2s_sizes,
+                                    budget.s2w_sizes)
+    f: list[Finding] = []
+    for d, sizes in (("w2s", budget.w2s_sizes), ("s2w", budget.s2w_sizes)):
+        got = split[d]["count"]
+        if got != len(sizes):
+            f.append(Finding(
+                "wire-budget", cell, "error",
+                f"{d}: {got} u8 all-gathers byte-matched, expected "
+                f"{len(sizes)}",
+                {"direction": d, "matched": got,
+                 "expected_sizes": [int(s) for s in sizes],
+                 "missing": split["missing"].get(d, [])}))
+    if split["unmatched_bytes"]:
+        f.append(Finding(
+            "wire-budget", cell, "error",
+            f"{len(split['unmatched_bytes'])} u8 all-gathers no wire "
+            "direction expects",
+            {"bytes": split["unmatched_bytes"]}))
+    if split["missing"].get("orphan"):
+        f.append(Finding(
+            "wire-budget", cell, "error",
+            "u8 all-gather-start without a matching done (truncated "
+            "module text?)",
+            {"bytes": split["missing"]["orphan"]}))
+    repack_kinds = {"all-reduce", "all-gather", "collective-permute"}
+    bad_kinds = sorted({p["kind"] for p in residual} - repack_kinds)
+    if bad_kinds:
+        f.append(Finding(
+            "wire-budget", cell, "error",
+            f"u8 payload in unexpected collectives: {', '.join(bad_kinds)}",
+            {"kinds": bad_kinds}))
+    repack = sum(int(round(p.get("count", 1.0))) * int(p["bytes"])
+                 for p in residual if p["kind"] in repack_kinds)
+    if repack > budget.s2w_nbytes:
+        f.append(Finding(
+            "wire-budget", cell, "error",
+            f"u8 repack bytes {repack} exceed one s2w broadcast "
+            f"({budget.s2w_nbytes}) — TP repack bound",
+            {"repack_bytes": repack, "s2w_nbytes": budget.s2w_nbytes}))
+    return f
+
+
+def _group_size(attrs: str) -> int | None:
+    """Replica-group size of a collective from its attribute text —
+    iota form ``replica_groups=[G,S]<=...`` or the explicit
+    ``replica_groups={{0,1,..},..}`` list. None when absent
+    (collective-permutes carry source_target_pairs instead)."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return m.group(1).count(",") + 1
+    return None
+
+
+def entry_u8_pairs(comps: dict) -> list[dict]:
+    """u8 collective records from the entry's unrolled (non-while)
+    region — the optimizer phases live here, so u8 payloads riding a
+    scanned layer loop never enter the wire budget. Each record carries
+    its replica-group size (``group``) so the attribution can tell
+    worker-axis direction gathers from model-axis repack traffic."""
+    pairs = []
+    for nm in _entry_reachable(comps, hlo_ir.entry_name(comps)):
+        comp = comps[nm]
+        for ins in comp.instrs:
+            kind, phase = hlo_ir.collective_kind(ins.op)
+            if kind is None or phase == "done":
+                continue
+            if not any(comp.types.get(o, "").startswith("u8[")
+                       for o in ins.operands):
+                continue
+            b = sum(comp.sizes.get(o, 0) for o in ins.operands)
+            p = {"kind": kind, "bytes": float(b), "u8": True,
+                 "count": 1.0, "name": ins.name}
+            g = _group_size(ins.attrs)
+            if g is not None:
+                p["group"] = g
+            if phase == "start" and not any(
+                    hlo_ir.base_op(o.op) == kind + "-done"
+                    and ins.name in o.operands for o in comp.instrs):
+                p["orphan"] = True
+            pairs.append(p)
+    return pairs
+
+
+@rule("wire-budget")
+def _wire_budget(art: ProgramArtifact, ctx: dict) -> list[Finding]:
+    if art.budget is None:
+        return []
+    return wire_budget_findings(entry_u8_pairs(art.comps), art.budget,
+                                art.cell)
+
+
+# -------------------------------------------------------------- replication
+
+MIN_REPL_DOT_FLOPS = 1 << 16   # ignore trinket dots (scalars, tiny tiles)
+
+
+def _entry_reachable(comps: dict, entry: str) -> list[str]:
+    """Computation names reachable from entry WITHOUT entering while
+    bodies. The model's scan-over-layers lives inside whiles; the NS
+    chains the replication audit cares about are unrolled in the entry
+    (via fusions/calls/conditionals), so stopping at whiles removes the
+    forward/backward pass's dot population from consideration."""
+    seen: list[str] = []
+    seen_set: set[str] = set()
+    stack = [entry]
+    while stack:
+        nm = stack.pop()
+        if nm in seen_set or nm not in comps:
+            continue
+        seen_set.add(nm)
+        seen.append(nm)
+        for ins in comps[nm].instrs:
+            if hlo_ir.base_op(ins.op) == "while":
+                continue
+            tail = ins.attrs + " " + ins.line
+            for m in hlo_ir.CALLED_RE.finditer(tail):
+                stack.append(m.group(1).lstrip("%"))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", tail)
+            if bm:
+                stack.extend(x.strip().lstrip("%")
+                             for x in bm.group(1).split(",") if x.strip())
+    return seen
+
+
+@rule("replication")
+def _replication(art: ProgramArtifact, ctx: dict) -> list[Finding]:
+    # Targets: the full stacked [B, m, n] shape (and its transpose) of
+    # every bucket whose pspec shards it. A dot producing or consuming
+    # that exact shape ran the NS chain replicated — the per-device
+    # shard never has those dims, so legit sharded chains can't match.
+    targets: dict[tuple, "tuple[str, tuple]"] = {}
+    for b in art.buckets:
+        if len(b.full_shape) != 3 or b.sharded_shape == b.full_shape:
+            continue
+        bb, m, n = b.full_shape
+        for t in {(bb, m, n), (bb, n, m)}:
+            targets.setdefault(t, (b.pspec, b.sharded_shape))
+    if not targets:
+        return []
+    from repro.launch.hlo_cost import dot_flops
+
+    comps = art.comps
+    hits: dict[tuple, list[str]] = {}
+    for nm in _entry_reachable(comps, hlo_ir.entry_name(comps)):
+        comp = comps[nm]
+        for ins in comp.instrs:
+            if hlo_ir.base_op(ins.op) not in ("dot", "dot-general"):
+                continue
+            shapes = [tuple(hlo_ir.first_shape_dims(ins.type_str))]
+            shapes += [tuple(hlo_ir.first_shape_dims(comp.types.get(o, "")))
+                       for o in ins.operands[:2]]
+            hit = next((s for s in shapes if s in targets), None)
+            if hit is None or dot_flops(ins, comp) < MIN_REPL_DOT_FLOPS:
+                continue
+            hits.setdefault(hit, []).append(ins.name)
+    out = []
+    for hit, names in sorted(hits.items()):
+        pspec, sharded = targets[hit]
+        out.append(Finding(
+            "replication", art.cell, "error",
+            f"dot materialises full NS bucket stack "
+            f"{'x'.join(map(str, hit))} despite pspec {pspec} "
+            f"(per-device {'x'.join(map(str, sharded))})",
+            {"count": len(names), "instrs": names[:8]}))
+    return out
+
+
+# ------------------------------------------------------------- dtype upcast
+
+U8_UPCAST_MIN_ELEMS = 1024     # small index/flag converts are fine
+
+
+@rule("dtype-upcast")
+def _dtype_upcast(art: ProgramArtifact, ctx: dict) -> list[Finding]:
+    f: list[Finding] = []
+    n64, example = 0, ""
+    for comp in art.comps.values():
+        for ins in comp.instrs:
+            if "f64[" in ins.type_str:
+                n64 += 1
+                example = example or ins.name
+    if n64:
+        f.append(Finding(
+            "dtype-upcast", art.cell, "error",
+            f"{n64} instruction(s) produce f64 values",
+            {"example": example}))
+    for (src, dst), (count, max_elems) in sorted(art.converts.items()):
+        if src == "u8" and dst.startswith("f") \
+                and max_elems >= U8_UPCAST_MIN_ELEMS:
+            f.append(Finding(
+                "dtype-upcast", art.cell, "error",
+                f"u8 -> {dst} convert widens wire bytes to float "
+                f"({max_elems} elements)",
+                {"count": count, "max_elems": max_elems}))
+    if art.state_in and len(art.state_in) == len(art.state_out):
+        for (pi, si, di), (_po, _so, do) in zip(art.state_in,
+                                                art.state_out):
+            if di != do:
+                f.append(Finding(
+                    "dtype-upcast", art.cell, "error",
+                    f"state leaf {pi} dtype drifts {di} -> {do} across "
+                    "the step"))
+    return f
+
+
+# ----------------------------------------------------------------- donation
+
+DONATE_MIN_BYTES = 1 << 16     # leaves below 64 KiB may legally not alias
+
+
+@rule("donation")
+def _donation(art: ProgramArtifact, ctx: dict) -> list[Finding]:
+    if not art.state_in:
+        return []
+    pbytes = entry_param_bytes(art.comps)
+    n_state = len(art.state_in)
+    f: list[Finding] = []
+    if (art.n_flat_args is not None and pbytes
+            and len(pbytes) != art.n_flat_args):
+        f.append(Finding(
+            "donation", art.cell, "warn",
+            f"compiled entry has {len(pbytes)} parameters, expected "
+            f"{art.n_flat_args} — argument pruning, positional audit "
+            "may misattribute",
+            {"params": len(pbytes), "expected": art.n_flat_args}))
+    state_bytes = sum(pbytes.get(i, 0) for i in range(n_state))
+    if not art.donate:
+        if state_bytes >= DONATE_MIN_BYTES:
+            f.append(Finding(
+                "donation", art.cell, "info",
+                f"state not donated: {state_bytes} bytes/device "
+                "double-buffered (--donate to alias in place)",
+                {"state_bytes": state_bytes}))
+        return f
+    missing = [i for i in range(n_state)
+               if pbytes.get(i, 0) >= DONATE_MIN_BYTES
+               and i not in art.aliased_params]
+    if missing:
+        tot = sum(pbytes[i] for i in missing)
+        f.append(Finding(
+            "donation", art.cell, "error",
+            f"{len(missing)} donated state leaves not input/output "
+            f"aliased ({tot} bytes/device still double-buffered)",
+            {"paths": [art.state_in[i][0] for i in missing[:8]],
+             "bytes": tot}))
+    return f
+
+
+# ---------------------------------------------------------------- host sync
+
+_HOST_OPS = {"infeed", "outfeed", "send", "send-done", "recv", "recv-done"}
+_HOST_TARGET_MARKERS = ("callback", "host", "infeed", "outfeed")
+
+
+@rule("host-sync")
+def _host_sync(art: ProgramArtifact, ctx: dict) -> list[Finding]:
+    hits: dict[str, list[str]] = {}
+    for comp in art.comps.values():
+        for ins in comp.instrs:
+            base = hlo_ir.base_op(ins.op)
+            if base in _HOST_OPS:
+                hits.setdefault(base, []).append(ins.name)
+            elif base == "custom-call":
+                m = re.search(r'custom_call_target="([^"]*)"',
+                              ins.attrs + " " + ins.line)
+                tgt = m.group(1) if m else ""
+                # device custom-calls ('TopK', cublas, ...) are fine;
+                # only targets that round-trip through the host block
+                # the step on Python / transfer latency
+                if any(k in tgt.lower() for k in _HOST_TARGET_MARKERS):
+                    hits.setdefault(f'custom-call "{tgt}"',
+                                    []).append(ins.name)
+    return [Finding(
+        "host-sync", art.cell, "error",
+        f"host round-trip in jitted step: {what} x{len(names)}",
+        {"instrs": names[:8]})
+        for what, names in sorted(hits.items())]
+
+
+# ----------------------------------------------------------- lowering drift
+
+@rule("lowering-drift")
+def _lowering_drift(art: ProgramArtifact, ctx: dict) -> list[Finding]:
+    hashes = ctx.get("baseline_hashes") or {}
+    h = art.canonical_hash
+    if art.cell not in hashes:
+        return [Finding("lowering-drift", art.cell, "info",
+                        f"no baseline hash recorded (current {h})")]
+    if not ctx.get("hashes_comparable", True):
+        return []      # baseline from a different jax version
+    if hashes[art.cell] != h:
+        return [Finding(
+            "lowering-drift", art.cell, "warn",
+            f"canonical HLO hash drifted {hashes[art.cell]} -> {h} "
+            "(re-baseline if intended)")]
+    return []
+
+
+def equality_findings(a: ProgramArtifact, b: ProgramArtifact
+                      ) -> list[Finding]:
+    """Arm-bit-equality claims (§10/§11 'lowers identically') as a hash
+    comparison between two artifacts compiled in the same process —
+    always enforceable, no baseline or version gate involved."""
+    if a.canonical_hash != b.canonical_hash:
+        return [Finding(
+            "lowering-drift", f"{a.cell}~{b.cell}", "error",
+            "arms claimed bit-identical lower differently "
+            f"({a.canonical_hash} != {b.canonical_hash})")]
+    return []

@@ -7,8 +7,7 @@ MoE topology, MLA dims scale coherently).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

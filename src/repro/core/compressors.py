@@ -366,7 +366,6 @@ class WithNatural:
         inner_b = self.inner.payload_bytes(shape, dtype)
         # float portion shrinks to 9/ (8*itemsize); int indices unchanged.
         # Recompute precisely per inner type:
-        it = _itemsize(dtype)
         if isinstance(self.inner, TopK):
             k = self.inner.k_for(shape)
             return k * 4 + k + (k + 7) // 8

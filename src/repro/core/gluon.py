@@ -15,7 +15,7 @@ embedding-like layers gives Scion; arbitrary per-layer norms give Gluon.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,6 @@ import jax.numpy as jnp
 from repro.dist.layerwise import vmap_n
 
 from .lmo import lmo_direction
-from .muon import ParamMeta
 
 
 def gluon_init(params: Any) -> dict:

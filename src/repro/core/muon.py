@@ -136,6 +136,62 @@ def _unzip(pairs: list, n: int) -> tuple[list, ...]:
     return tuple(list(x) for x in zip(*pairs)) if pairs else tuple([] for _ in range(n))
 
 
+@dataclass(frozen=True)
+class WireBudget:
+    """The static per-step collective budget of the two wire legs — the
+    single source of truth behind the byte-for-byte invariants: exactly
+    ``len(w2s_sizes)`` w2s payload all-gathers and ``len(s2w_sizes)``
+    s2w broadcast all-gathers, each moving exactly its listed u8 bytes
+    per device (one entry per stage sub-buffer; monolithic => one
+    entry; an unpacked direction => no entries). Consumed by the
+    dry-run attribution, the SPMD wire tests and the §12 lint rules, so
+    the compiled-program checks can never drift from the resolution the
+    step function actually uses (``EF21Muon.wire_budget``)."""
+    pack_w2s: bool
+    pack_s2w: bool
+    n_stages: int                  # effective pipeline stages (1 = mono)
+    w2s_sizes: tuple[int, ...]     # expected u8 bytes, one per gather
+    s2w_sizes: tuple[int, ...]
+    # replica-group size of a direction gather (the worker axis): lets
+    # the lint attribution tell wire gathers from the model-axis TP
+    # repack the partitioner may lower as sub-group gathers/permutes
+    n_workers: int = 1
+
+    @property
+    def w2s_nbytes(self) -> int:
+        return sum(self.w2s_sizes)
+
+    @property
+    def s2w_nbytes(self) -> int:
+        return sum(self.s2w_sizes)
+
+    @property
+    def two_way_nbytes(self) -> int:
+        return self.w2s_nbytes + self.s2w_nbytes
+
+
+def resolve_pack_s2w(cfg: EF21MuonConfig, distributed: bool) -> bool:
+    """The resolved s2w pack switch (§9): requires a compressing C_P and
+    a communication hook, then ``wire_pack_s2w`` with "auto" following
+    ``wire_pack``. Shared by ``make_step`` and every byte account."""
+    return (cfg.s2w != "identity" and distributed
+            and (cfg.wire_pack if cfg.wire_pack_s2w == "auto"
+                 else bool(cfg.wire_pack_s2w)))
+
+
+def resolve_stage_plan(cfg: EF21MuonConfig, plan, mesh=None,
+                       fsdp: bool = False, any_pack: bool = True):
+    """The resolved stage partition (§8), or None when the pipeline
+    collapses to the monolithic single-gather path: staging needs a
+    packed direction, NS bucketing, ``wire_stages != 1`` and more than
+    one effective stage."""
+    if not (any_pack and cfg.ns_bucketing and cfg.wire_stages != 1):
+        return None
+    sp = plan.stage_plan(mesh=mesh, fsdp=fsdp, wire_stages=cfg.wire_stages,
+                         ns_steps=cfg.ns_steps)
+    return sp if sp.n_stages > 1 else None
+
+
 class EF21Muon:
     def __init__(self, cfg: EF21MuonConfig):
         self.cfg = cfg
@@ -232,11 +288,43 @@ class EF21Muon:
         return dense_payload_bytes(
             (p.shape for p in jax.tree.leaves(params)), self.cfg.wire_dtype)
 
+    def wire_budget(self, params: Any, metas: Any, mesh=None,
+                    fsdp: bool = False,
+                    distributed: bool = True) -> WireBudget:
+        """The resolved :class:`WireBudget` for this config on
+        ``params`` — the exact u8 collective population ``make_step``'s
+        lowering emits, computed through the same ``resolve_pack_s2w``
+        / ``resolve_stage_plan`` switches the step function uses.
+        ``distributed=False`` models the hook-less single-process step
+        (no collectives, both directions unpacked)."""
+        cfg = self.cfg
+        plan = self.plan(params, metas)
+        pack_w2s = bool(cfg.wire_pack and distributed)
+        pack_s2w = resolve_pack_s2w(cfg, distributed)
+        splan = resolve_stage_plan(cfg, plan, mesh=mesh, fsdp=fsdp,
+                                   any_pack=pack_w2s or pack_s2w)
+
+        def sizes(direction: str, packed: bool) -> tuple[int, ...]:
+            if not packed:
+                return ()
+            if splan is not None:
+                sw = plan.staged_wire_layout(cfg.wire_dtype, splan,
+                                             direction=direction)
+                return tuple(sw.stage_nbytes(k)
+                             for k in range(sw.n_stages))
+            return (plan.wire_layout(
+                cfg.wire_dtype, direction=direction).total_nbytes,)
+
+        return WireBudget(pack_w2s, pack_s2w,
+                          splan.n_stages if splan is not None else 1,
+                          sizes("w2s", pack_w2s), sizes("s2w", pack_s2w),
+                          n_workers=cfg.n_workers)
+
     # The jit-friendly entry point: metas are static, so we build the step
     # function once per (metas, shapes) and let the caller jit it.
     def make_step(self, metas: Any,
                   reshard_payloads: Callable | None = None,
-                  donate: bool = False, mesh=None,
+                  mesh=None,
                   fsdp: bool = False,
                   reshard_updates: Callable | None = None,
                   faults=None) -> Callable:
@@ -276,10 +364,7 @@ class EF21Muon:
         pack_wire = cfg.wire_pack and reshard_payloads is not None
         if reshard_updates is None:
             reshard_updates = reshard_payloads
-        pack_s2w = (cfg.s2w != "identity"
-                    and reshard_updates is not None
-                    and (cfg.wire_pack if cfg.wire_pack_s2w == "auto"
-                         else bool(cfg.wire_pack_s2w)))
+        pack_s2w = resolve_pack_s2w(cfg, reshard_updates is not None)
         if reshard_payloads is None:
             reshard_payloads = lambda tree: tree
         if reshard_updates is None:
@@ -304,14 +389,8 @@ class EF21Muon:
             buckets = (plan.ns_buckets(mesh=mesh, fsdp=fsdp)
                        if cfg.ns_bucketing else ())
             bucketed = {i for b in buckets for i in b.leaf_ids}
-            splan = None
-            if (pack_wire or pack_s2w) and cfg.ns_bucketing \
-                    and cfg.wire_stages != 1:
-                sp = plan.stage_plan(mesh=mesh, fsdp=fsdp,
-                                     wire_stages=cfg.wire_stages,
-                                     ns_steps=cfg.ns_steps)
-                if sp.n_stages > 1:
-                    splan = sp
+            splan = resolve_stage_plan(cfg, plan, mesh=mesh, fsdp=fsdp,
+                                       any_pack=pack_wire or pack_s2w)
 
             # ---- 1. EF21-P: workers' model estimate W (S = C_P(X - W)).
             # With s2w wire packing the broadcast leg is explicit (§9):

@@ -6,7 +6,6 @@ interpret mode (kept for tests, too slow for the training loop).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

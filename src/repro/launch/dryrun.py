@@ -25,11 +25,9 @@ import math
 import os
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.dist import (batch_pspec, n_workers_for, param_pspecs,
@@ -156,37 +154,16 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
         plan = tr.layer_plan()
         wire_dt = tr.opt.cfg.wire_dtype
         # s2w leg (§9): analytic + exact wire bytes of the model-update
-        # broadcast, plus the resolved pack switch the compiled step
-        # actually uses
-        pack_s2w = (s2w != "identity"
-                    and (wire_pack if wire_pack_s2w == "auto"
-                         else bool(wire_pack_s2w)))
+        # broadcast. The resolved pack switches and the expected
+        # per-collective stage sizes come from the shared WireBudget
+        # (core.muon) — the exact resolution the compiled step uses, so
+        # the attribution below can never drift from the lowering.
+        budget = tr.wire_budget()
         s2w_analytic = (plan.s2w_bytes_per_round(wire_dt)
                         if s2w != "identity" else 0)
-        s2w_wire = (plan.wire_layout(wire_dt,
-                                     direction="s2w").total_nbytes
-                    if pack_s2w else 0)
-        splan = (plan.stage_plan(mesh=mesh, fsdp=use_fsdp,
-                                 wire_stages=wire_stages)
-                 if (wire_pack or pack_s2w) and ns_bucketing
-                 and wire_stages != 1 else None)
-        if splan is not None and splan.n_stages <= 1:
-            splan = None
-
-        def _stage_sizes(direction: str, packed: bool) -> list[int]:
-            """Expected per-collective u8 byte counts for attribution:
-            one entry per stage sub-buffer (monolithic => one entry)."""
-            if not packed:
-                return []
-            if splan is not None:
-                sw = plan.staged_wire_layout(wire_dt, splan,
-                                             direction=direction)
-                return [sw.stage_nbytes(k) for k in range(sw.n_stages)]
-            return [plan.wire_layout(wire_dt,
-                                     direction=direction).total_nbytes]
-
-        w2s_stage_sizes = _stage_sizes("w2s", wire_pack)
-        s2w_stage_sizes = _stage_sizes("s2w", pack_s2w)
+        s2w_wire = budget.s2w_nbytes
+        w2s_stage_sizes = list(budget.w2s_sizes)
+        s2w_stage_sizes = list(budget.s2w_sizes)
         w2s_analytic = plan.w2s_bytes_per_worker(wire_dt)
         w2s_wire = plan.wire_layout(wire_dt).total_nbytes
         rec.update(w2s_bytes_analytic=w2s_analytic,
@@ -205,8 +182,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                    wire_stages=wire_stages,
                    # effective pipeline stage count (§8); 1 when the
                    # staged path collapses to the monolithic gather
-                   n_wire_stages=(splan.n_stages if splan is not None
-                                  else 1))
+                   n_wire_stages=budget.n_stages)
         batch = input_specs(cfg, shape, n_workers=n_w)
         state = tr.state_shapes()
         jitted = tr.jit_step(batch)

@@ -14,30 +14,9 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+from repro.analysis.hlo_ir import collective_kind, operand_span, type_bytes
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+) = (.*?) ([\w\-]+)\(")
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-
-def _type_bytes(type_str: str) -> int:
-    """Bytes of an HLO type string (handles tuples)."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
 
 
 def collective_bytes(hlo_text: str) -> dict:
@@ -49,29 +28,13 @@ def collective_bytes(hlo_text: str) -> dict:
         if not m:
             continue
         name, type_str, op = m.group(1), m.group(2), m.group(3)
-        sizes[name.lstrip("%")] = _type_bytes(type_str)
-        base = op.rstrip(".0123456789")
-        for coll in _COLLECTIVES:
-            if base == coll or base == coll + "-start" or \
-                    base == coll + "-done":
-                if base.endswith("-done"):
-                    break  # counted at -start
-                # operand list: everything up to the first '),' at depth 0
-                args = line[line.index("(") + 1:]
-                depth = 0
-                end = len(args)
-                for i, ch in enumerate(args):
-                    if ch == "(":
-                        depth += 1
-                    elif ch == ")":
-                        if depth == 0:
-                            end = i
-                            break
-                        depth -= 1
-                ops = [a.strip().lstrip("%")
-                       for a in args[:end].split(",") if a.strip()]
-                pending.append((coll, ",".join(ops)))
-                break
+        sizes[name.lstrip("%")] = type_bytes(type_str)
+        kind, phase = collective_kind(op)
+        if kind is None or phase == "done":   # bytes counted at -start
+            continue
+        span, _ = operand_span(line[line.index("(") + 1:])
+        ops = [a.strip().lstrip("%") for a in span.split(",") if a.strip()]
+        pending.append((kind, ",".join(ops)))
     by_kind: dict[str, int] = defaultdict(int)
     count = 0
     for coll, ops in pending:
@@ -97,19 +60,32 @@ def attribute_u8_directions(coll_pairs: list, w2s_sizes, s2w_sizes) -> dict:
     counts stay exact even on collisions. Returns per-direction
     measured ``{"bytes", "count"}`` plus ``unmatched_bytes`` (u8 pairs
     no direction expected) and ``missing`` (expected sizes never seen)
-    — both empty iff the two-direction invariant holds."""
+    — both empty iff the two-direction invariant holds.
+
+    A pair flagged ``orphan`` (an async ``-start`` whose ``-done`` never
+    appeared — truncated HLO text, see hlo_cost) is **not** matched
+    against either direction: a gather that cannot be shown to complete
+    must not satisfy the byte invariant. Its bytes are reported under
+    ``missing["orphan"]`` (and its expected size, if any, stays missing
+    too), so truncation surfaces as a violation instead of silently
+    passing partial attribution."""
     expected = {"w2s": defaultdict(int), "s2w": defaultdict(int)}
     for s in w2s_sizes:
         expected["w2s"][int(s)] += 1
     for s in s2w_sizes:
         expected["s2w"][int(s)] += 1
     out = {d: {"bytes": 0, "count": 0} for d in ("w2s", "s2w")}
-    unmatched = []
+    unmatched: list[int] = []
+    orphans: list[int] = []
     for p in coll_pairs:
         if not p.get("u8"):
             continue
         b = int(p["bytes"])
-        for _ in range(max(int(round(p.get("count", 1.0))), 0)):
+        n = max(int(round(p.get("count", 1.0))), 0)
+        if p.get("orphan"):
+            orphans.extend([b] * n)
+            continue
+        for _ in range(n):
             d = next((d for d in ("w2s", "s2w") if expected[d][b] > 0),
                      None)
             if d is None:
@@ -120,6 +96,8 @@ def attribute_u8_directions(coll_pairs: list, w2s_sizes, s2w_sizes) -> dict:
                 out[d]["count"] += 1
     missing = {d: sorted(sz for sz, n in exp.items() for _ in range(n))
                for d, exp in expected.items() if sum(exp.values())}
+    if orphans:
+        missing["orphan"] = sorted(orphans)
     return {"w2s": out["w2s"], "s2w": out["s2w"],
             "unmatched_bytes": sorted(unmatched), "missing": missing}
 

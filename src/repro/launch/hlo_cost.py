@@ -44,6 +44,10 @@ per occurrence). ``launch/hlo_analysis.py`` turns the pair list into the
 ``exposed_collective`` roofline term.
 
 Validated against unrolled references in tests/test_hlo_cost.py.
+
+The text-parsing layer lives in ``repro.analysis.hlo_ir`` (shared with
+``hlo_analysis.py`` and the §12 lint rules); ``parse_module`` / ``Instr``
+/ ``Computation`` are re-exported here unchanged.
 """
 from __future__ import annotations
 
@@ -51,151 +55,23 @@ import re
 from collections import defaultdict
 from dataclasses import dataclass, field
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
+from repro.analysis.hlo_ir import (
+    CALLED_RE as _CALLED,
+    COLLECTIVES as _COLLECTIVES,
+    COND_RE as _COND,
+    Computation as Computation,
+    Instr as Instr,
+    entry_name as _entry_name,
+    first_shape_dims as _first_shape_dims,
+    parse_module as parse_module,
+)
+
 _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "bitcast", "after-all", "reshape", "iota", "partition-id",
              "replica-id", "convert"}
 # "convert" is free: on TPU dtype converts fuse into producers/consumers
 # (bf16 x bf16 -> f32 is native MXU); the CPU backend materialises them,
 # which would otherwise leak CPU-only traffic into the roofline.
-
-
-def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
-    elems = tot = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        elems += n
-        tot += n * _DTYPE_BYTES[dt]
-    return elems, tot
-
-
-def _first_shape_dims(type_str: str) -> list[int]:
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return []
-    return [int(d) for d in m.group(2).split(",") if d]
-
-
-@dataclass
-class Instr:
-    name: str
-    type_str: str
-    op: str
-    operands: list[str]
-    attrs: str
-    line: str
-
-
-@dataclass
-class Computation:
-    name: str
-    instrs: list[Instr] = field(default_factory=list)
-    sizes: dict = field(default_factory=dict)     # name -> bytes
-    elems: dict = field(default_factory=dict)     # name -> element count
-    types: dict = field(default_factory=dict)     # name -> type str
-
-
-_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*(\(.*)?\{\s*$")
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+) = ((?:\([^=]*?\)|[^(=]*?)) ([\w\-]+)\((.*)$")
-_PARAM_RE = re.compile(r"(%?[\w.\-]+):\s*((?:\w+\[[\d,]*\][^,)]*|\([^)]*\)))")
-_CALLED = re.compile(r"(?:calls|to_apply|body)=(%?[\w.\-]+)")
-_COND = re.compile(r"condition=(%?[\w.\-]+)")
-
-
-def _operand_name(o: str) -> str:
-    """Reference name of one operand. Depending on XLA version the text
-    form is either bare (``%foo.1``) or typed
-    (``f32[1,2]{1,0} %foo.1``); take the trailing %-token."""
-    toks = o.split()
-    for t in reversed(toks):
-        if t.startswith("%"):
-            return t.lstrip("%")
-    return toks[-1].lstrip("%") if toks else o
-
-
-def _split_top(s: str) -> list[str]:
-    """Split an operand list at depth 0 commas."""
-    out, depth, cur = [], 0, []
-    for ch in s:
-        if ch in "([{":
-            depth += 1
-        elif ch in ")]}":
-            depth -= 1
-        if ch == "," and depth == 0:
-            out.append("".join(cur).strip())
-            cur = []
-        else:
-            cur.append(ch)
-    if cur:
-        out.append("".join(cur).strip())
-    return out
-
-
-def parse_module(text: str) -> dict[str, Computation]:
-    comps: dict[str, Computation] = {}
-    cur: Computation | None = None
-    for raw in text.splitlines():
-        # strip /*index=N*/ comments: they contain '=' and '(' characters
-        # that break type/operand parsing of long tuple-typed instructions
-        line = re.sub(r"/\*.*?\*/", "", raw.rstrip())
-        if cur is None:
-            m = _COMP_HEADER.match(line.strip())
-            head = line.split("{")[0]
-            if m and " = " not in head:
-                cur = Computation(m.group(1).lstrip("%"))
-                # header params carry types
-                for pname, ptype in _PARAM_RE.findall(line):
-                    n = pname.lstrip("%")
-                    _, b = _shape_elems_bytes(ptype)
-                    e, _ = _shape_elems_bytes(ptype)
-                    cur.sizes[n] = b
-                    cur.elems[n] = e
-                    cur.types[n] = ptype
-            continue
-        if line.strip() == "}":
-            comps[cur.name] = cur
-            cur = None
-            continue
-        m = _INSTR_RE.match(line)
-        if not m:
-            continue
-        name = m.group(1).lstrip("%")
-        type_str = m.group(2).strip()
-        op = m.group(3)
-        rest = m.group(4)
-        # operand list: up to matching close paren at depth 0
-        depth = 0
-        end = len(rest)
-        for i, ch in enumerate(rest):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                if depth == 0:
-                    end = i
-                    break
-                depth -= 1
-        ops = [_operand_name(o.strip()) for o in _split_top(rest[:end])
-               if o.strip()]
-        attrs = rest[end + 1:]
-        e, b = _shape_elems_bytes(type_str)
-        cur.sizes[name] = b
-        cur.elems[name] = e
-        cur.types[name] = type_str
-        cur.instrs.append(Instr(name, type_str, op, ops, attrs, line))
-    return comps
 
 
 def _trip_count(cond: Computation) -> int:
@@ -243,6 +119,11 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
             if d and int(d) < len(dims):
                 contracted *= dims[int(d)]
     return 2.0 * out_elems * contracted
+
+
+# analysis.rules sizes candidate dots with the same model the cost
+# propagation uses, so the replication audit and the roofline agree
+dot_flops = _dot_flops
 
 
 def _operand_read_bytes(comp: Computation, ins: Instr,
@@ -367,12 +248,21 @@ def _pairs_for_comp(comp: Computation, instr_flops) -> list[dict]:
         b = sum(comp.sizes.get(o, 0) for o in ins.operands)
         u8 = any(comp.types.get(o, "").startswith("u8[")
                  for o in ins.operands)
+        orphan = False
         if base.endswith("-start"):
             # scheduled overlap: FLOPs strictly between start and done
             j = next((jx for jx in range(i + 1, n)
                       if comp.instrs[jx].op.rstrip(".0123456789")
                       == kind + "-done"
-                      and ins.name in comp.instrs[jx].operands), n)
+                      and ins.name in comp.instrs[jx].operands), None)
+            if j is None:
+                # no matching -done (truncated HLO text): the in-flight
+                # window is unbounded, so the overlap credit is
+                # meaningless. Mark the pair instead of silently
+                # windowing to the end — attribute_u8_directions reports
+                # orphans instead of matching them against a direction.
+                j = n
+                orphan = True
             flops = prefix[j] - prefix[i + 1]
         else:
             # sync collective: *schedulable* overlap — the FLOPs of every
@@ -389,9 +279,12 @@ def _pairs_for_comp(comp: Computation, instr_flops) -> list[dict]:
             desc = _reach(comp, i, pos, users, forward=True)
             flops = sum(fl[k] for k in range(n)
                         if k != i and k not in anc and k not in desc)
-        pairs.append({"kind": kind, "bytes": float(b), "u8": bool(u8),
-                      "overlap_flops": float(flops), "count": 1.0,
-                      "name": ins.name})
+        p = {"kind": kind, "bytes": float(b), "u8": bool(u8),
+             "overlap_flops": float(flops), "count": 1.0,
+             "name": ins.name}
+        if orphan:
+            p["orphan"] = True
+        pairs.append(p)
     return pairs
 
 
@@ -504,11 +397,7 @@ def analyze(text: str) -> dict:
         memo[key] = c
         return c
 
-    entry = None
-    for name in comps:
-        if name.startswith("main") or ".main" in name or entry is None:
-            if entry is None or name.startswith("main"):
-                entry = name
+    entry = _entry_name(comps)
     c = comp_cost(entry, False)
     return {"flops": c.flops, "hbm_bytes": c.hbm_bytes,
             "coll_bytes": c.coll_bytes,
@@ -523,10 +412,7 @@ def top_contributors(text: str, n: int = 20, key: str = "hbm"):
     """Profile view for the perf loop: the n instructions contributing the
     most HBM bytes / FLOPs / collective bytes, trip-count-scaled."""
     comps = parse_module(text)
-    entry = None
-    for name in comps:
-        if entry is None or name.startswith("main"):
-            entry = name
+    entry = _entry_name(comps)
     rows: list[tuple[float, str, str, str]] = []
 
     def visit(name: str, scale: float, fused: bool):

@@ -14,7 +14,7 @@ import time
 
 import jax
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ShapeSpec
 from repro.core.schedule import warmup_linear_decay
 from repro.data import SyntheticLM
@@ -93,6 +93,11 @@ def main():
                     help="chaos schedule, e.g. "
                          "'drop:w=1:steps=5-10,nan:w=0:steps=7,"
                          "flip:steps=4:bits=8' (repro.train.faults)")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate the optimizer state to the jitted step "
+                         "(in-place buffer reuse instead of double-"
+                         "buffering; the §12 donation-audit rule "
+                         "certifies the aliasing)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -107,14 +112,17 @@ def main():
         n_workers=args.workers, beta=args.beta, w2s=args.w2s, s2w=args.s2w,
         remat=False, use_pallas=False, metrics=args.metrics_out is not None,
         trace_spans=args.trace_spans, participation=args.participation,
-        participation_seed=args.participation_seed, faults=faults)
+        participation_seed=args.participation_seed, faults=faults,
+        donate=args.donate)
     tr = Trainer(model, tcfg)
     state = tr.init(jax.random.key(args.seed))
     start = 0
     if args.resume:
         state, start = load_checkpoint(args.resume, state)
         print(f"resumed from {args.resume} @ step {start}")
-    step_fn = jax.jit(tr.make_step())
+    # jit through the trainer so --donate's donate_argnums applies (the
+    # input state is consumed per step; the loop rebinds it anyway)
+    step_fn = tr.jit_step(None)
     sched = warmup_linear_decay(args.radius, args.warmup, args.steps)
     # wire accounting straight from the LayerPlan (Table 2 source of
     # truth) — both directions plus the two-way total (§9)

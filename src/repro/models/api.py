@@ -23,7 +23,6 @@ Shape kinds:
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

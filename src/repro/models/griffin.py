@@ -231,7 +231,6 @@ class GriffinModel:
         return _norm(cfg, params, "final_ln", x), new_cache
 
     def loss(self, params, batch, *, remat: bool = True):
-        cfg = self.cfg
         x = params["embed"][batch["tokens"]]
         s = x.shape[1]
         pos = jnp.broadcast_to(jnp.arange(s)[None], x.shape[:2])

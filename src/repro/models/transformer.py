@@ -20,8 +20,6 @@ activations never live across layers.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

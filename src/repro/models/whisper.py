@@ -176,7 +176,6 @@ class WhisperModel:
 
     # --------------------------------------------------------------- serving
     def prefill(self, params, batch, cache):
-        cfg = self.cfg
         enc_out = self.encode(params, batch["frames"])
         cross_kv = self._cross_kv(params, enc_out)
         tokens = batch["tokens"]
@@ -192,7 +191,6 @@ class WhisperModel:
         return logits_last(h[:, -1], params["unembed"]), cache
 
     def decode_step(self, params, batch, cache):
-        cfg = self.cfg
         t = batch["t"]
         pos = jnp.broadcast_to(t[None, None], batch["token"].shape
                                ).astype(jnp.int32)

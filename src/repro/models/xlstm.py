@@ -22,7 +22,6 @@ in sequence length, which is what makes long_500k admissible.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

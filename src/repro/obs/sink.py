@@ -20,6 +20,8 @@ Kinds and their required fields (``validate_record``):
               optional ef_summary rows
     dryrun    arch/shape/mesh/tag:str, status    — launch/dryrun rows
     bench     bench:str                          — benchmarks/* rows
+    lint      rule/cell/level/message:str        — analysis.lint findings
+              (§12); optional data:{...} rule payload
 
 Legacy rows (pre-v1, no ``schema`` key) validate structurally: the kind
 is inferred (``bench`` key => bench, arch/shape/mesh/tag => dryrun), so
@@ -55,6 +57,7 @@ REQUIRED: dict[str, dict] = {
     "dryrun": {"arch": str, "shape": str, "mesh": str, "tag": str,
                "status": str},
     "bench": {"bench": str},
+    "lint": {"rule": str, "cell": str, "level": str, "message": str},
 }
 
 

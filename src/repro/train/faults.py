@@ -39,7 +39,7 @@ CLI grammar (``parse_faults``), comma-separated clauses:
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,7 @@ the multi-pod dry-run (ShapeDtypeStruct in, .lower().compile() out).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Callable
 
@@ -76,6 +76,14 @@ class TrainerConfig:
                                # schedule (drops / NaN grads / wire bit
                                # flips) injected inside the step (§11);
                                # forces the guard on
+    donate: bool = False       # donate the optimizer state to the jitted
+                               # step (donate_argnums=(0,)): X / EF21
+                               # error / momentum buffers are updated
+                               # in place instead of double-buffered.
+                               # Donation lives at the jit boundary, so
+                               # this is applied in ``jit_step`` — the
+                               # §12 donation-audit rule checks the
+                               # compiled input_output_alias against it
 
 
 class Trainer:
@@ -105,7 +113,24 @@ class Trainer:
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> dict:
         params, _ = self.model.init(key)
-        return self.opt.init(jax.random.fold_in(key, 1), params, self.metas)
+        state = self.opt.init(jax.random.fold_in(key, 1), params,
+                              self.metas)
+        if self.tcfg.donate:
+            # XLA rejects donating one buffer twice, and tied leaves
+            # (e.g. shared embed/unembed) are the same array at init.
+            # Copy repeats into their own buffers — every later step
+            # returns distinct output buffers anyway, so this only
+            # mirrors the steady state.
+            seen: set[int] = set()
+
+            def _dedup(x):
+                if id(x) in seen:
+                    return jnp.copy(x)
+                seen.add(id(x))
+                return x
+
+            state = jax.tree.map(_dedup, state)
+        return state
 
     def state_shapes(self) -> Any:
         """Abstract optimizer state (dry-run input)."""
@@ -197,10 +222,24 @@ class Trainer:
 
     def jit_step(self, batch_shapes: Any):
         """Jitted step with explicit in/out shardings (and the entry point
-        the dry-run lowers)."""
+        the dry-run lowers). With ``tcfg.donate`` the optimizer state
+        argument is donated: state in and state out share shardings (and
+        matching avals leaf-for-leaf), so XLA aliases every state buffer
+        instead of double-buffering the largest arrays in the program —
+        callers must not reuse the input state after the call."""
         step = self.make_step()
+        donate = (0,) if self.tcfg.donate else ()
         if self.mesh is None:
-            return jax.jit(step)
+            return jax.jit(step, donate_argnums=donate)
         st_sh, b_sh = self.shardings(batch_shapes)
         return jax.jit(step, in_shardings=(st_sh, b_sh, None),
-                       out_shardings=(st_sh, None))
+                       out_shardings=(st_sh, None),
+                       donate_argnums=donate)
+
+    def wire_budget(self):
+        """The resolved :class:`repro.core.muon.WireBudget` of this
+        trainer's step — the exact u8 collective population the §12
+        wire rules check the compiled HLO against."""
+        return self.opt.wire_budget(
+            self._params_shapes, self.metas, mesh=self.mesh,
+            fsdp=self.tcfg.fsdp, distributed=self.mesh is not None)

@@ -24,7 +24,6 @@ sender/receiver invariant survives the wire in both directions.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 from typing import Any
 

@@ -1,5 +1,4 @@
 """Contractive-compressor properties (paper Def. 1, §D)."""
-import math
 
 import jax
 import jax.numpy as jnp
@@ -138,7 +137,6 @@ def test_with_natural_combo_bytes(key):
     """TopK+Natural / RankK+Natural payloads: float planes shrink to
     9 bits/value; indices stay int32 (paper Table 2 accounting)."""
     shape = (64, 48)
-    n = 64 * 48
     top = C.WithNatural(C.TopK(0.1))
     k = top.inner.k_for(shape)
     assert top.payload_bytes(shape, jnp.bfloat16) == k * 4 + k + (k + 7) // 8

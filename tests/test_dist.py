@@ -3,7 +3,7 @@ disambiguation, LayerPlan wire accounting, and the Server mesh path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.muon import EF21Muon, EF21MuonConfig, ParamMeta
 from repro.dist.sharding import serve_pspecs

@@ -2,10 +2,6 @@
 partition rule, head-padding adaptation, mesh helpers."""
 import dataclasses
 
-import jax
-import pytest
-from jax.sharding import PartitionSpec as P
-
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.launch.hlo_analysis import roofline_terms
 

@@ -12,7 +12,6 @@ from _hypothesis_compat import given, settings, st
 from repro.configs import get_config
 from repro.core.lmo import lmo_direction, lmo_direction_batched
 from repro.core.muon import EF21Muon, EF21MuonConfig, ParamMeta
-from repro.dist.bucketing import build_buckets
 from repro.dist.layerwise import LayerPlan
 from repro.kernels import ref
 from repro.kernels.ops import (count_ns_dispatches, newton_schulz,

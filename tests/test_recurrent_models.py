@@ -4,7 +4,6 @@ cells (these are the model-level oracles for the SSM/hybrid families)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 # property tests skip individually when hypothesis is absent; the
 # plain oracle tests in this file still run (see _hypothesis_compat)
 from _hypothesis_compat import given, settings, st

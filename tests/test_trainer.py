@@ -61,6 +61,30 @@ def test_trainer_loss_decreases(key):
     assert int(state["step"]) == 40
 
 
+def test_donated_step_executes_and_matches(key):
+    """Donation regression: tied leaves (shared embed/unembed) are the
+    same buffer at init, and XLA rejects donating one buffer twice —
+    Trainer.init must de-alias repeats when tcfg.donate is set. Run
+    real donated steps (the static lint only compiles) and pin them
+    value-equal to the undonated arm."""
+    cfg = get_config("granite-3-2b").reduced()
+    sh = ShapeSpec("t", "train", 64, 8)
+    data = SyntheticLM(cfg, sh, n_workers=2, seed=0)
+    sched = warmup_linear_decay(0.01, 2, 10)
+    results = {}
+    for donate in (False, True):
+        tr = Trainer(build_model(cfg),
+                     TrainerConfig(n_workers=2, beta=0.5, w2s="top10",
+                                   remat=False, use_pallas=False,
+                                   donate=donate))
+        state = tr.init(key)
+        step = tr.jit_step(None)
+        for i in range(3):
+            state, aux = step(state, data.batch_at(i), sched(i))
+        results[donate] = (float(aux["loss"]), int(state["step"]))
+    assert results[True] == results[False], results
+
+
 def test_checkpoint_roundtrip(tmp_path, key):
     cfg = get_config("qwen2.5-3b").reduced()
     model = build_model(cfg)

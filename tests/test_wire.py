@@ -14,7 +14,6 @@ from repro.core.error_feedback import apply_payload, ef_compress_step
 from repro.core.muon import EF21Muon, EF21MuonConfig, ParamMeta
 from repro.dist.layerwise import LayerPlan
 from repro.wire.codecs import NarrowIntCodec, RawCodec, index_domains
-from repro.wire.layout import build_layout
 
 
 def _single_leaf_layout(name, shape, stack_dims=0, lmo="spectral",
