@@ -1,0 +1,138 @@
+"""Resync/recovery soak (DESIGN.md §13) — ``BENCH_resync.json``.
+
+Two arms, one row each:
+
+  ``soak``        the heterogeneous-quadratic EF21-Muon step with the
+                  rejoin subsystem compiled in (R=4 replay ring) under a
+                  deterministic absence schedule that exercises BOTH
+                  recovery paths: short absences (lag <= R, replayed
+                  from the ring) and one long absence (lag > R, full W
+                  resync). Reports replay-vs-full counts, recovery
+                  latency (rounds caught up per rejoin), the max
+                  version lag, and the bit-equality of every worker's W
+                  estimate against the server's at the end — the §13
+                  invariant, measured not assumed.
+  ``supervisor``  the host-side half: a supervised loop over the same
+                  step with an injected stall longer than the step
+                  timeout — reports retries, recovery wall latency, and
+                  that the run completed.
+
+The CI chaos-soak job complements this with the out-of-process arm
+(``bernoulli(0.5)`` + stall + hard crash + ``--resume`` through the
+train CLI); this module is the deterministic, committed trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.muon import EF21Muon, EF21MuonConfig, ParamMeta
+from repro.dist.participation import Explicit
+from repro.train.faults import parse_faults
+from repro.train.supervisor import Supervisor, SupervisorConfig
+
+N_W = 4
+RING = 4
+
+
+def _problem(dim=16, seed=0):
+    key = jax.random.key(seed)
+    Ts = jax.random.normal(key, (N_W, dim, dim))
+
+    def gal(p, wb):
+        t = Ts[jnp.int32(wb[0])]
+        return 0.5 * jnp.sum((p - t) ** 2), (p - t)
+
+    return (jnp.zeros((dim, dim)), ParamMeta("spectral", 1.0, 0), gal,
+            jnp.arange(float(N_W)).reshape(N_W, 1))
+
+
+def _absence_schedule(n_steps: int):
+    """Deterministic mask table: worker 1 takes two short absences
+    (2 and 3 rounds — both replayable at R=4) and worker 2 one long
+    absence (6 rounds > R — full resync); everyone else stays."""
+    masks = [[1] * N_W for _ in range(n_steps)]
+    for s in range(3, 5):
+        masks[s][1] = 0          # lag 2  -> replay
+    for s in range(10, 13):
+        masks[s][1] = 0          # lag 3  -> replay
+    for s in range(16, 22):
+        masks[s][2] = 0          # lag 6  -> full resync
+    return Explicit(tuple(tuple(m) for m in masks))
+
+
+def _soak_row(fast: bool) -> dict:
+    n_steps = 30 if fast else 60
+    params, metas, gal, batch = _problem()
+    opt = EF21Muon(EF21MuonConfig(
+        n_workers=N_W, beta=0.5, w2s="top10", s2w="natural",
+        use_pallas=False, participation=_absence_schedule(n_steps),
+        resync=RING))
+    state = opt.init(jax.random.key(0), params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas)(s, gal, b, 0.05))
+    replayed = full = 0
+    lags, losses, recovery_lags = [], [], []
+    prev_lag = 0
+    for _ in range(n_steps):
+        state, aux = step(state, batch)
+        r, f = int(aux["resync_replayed"]), int(aux["resync_full"])
+        lag = int(aux["version_lag_max"])
+        if r or f:
+            # rounds the rejoining worker was behind == its recovery
+            # latency in steps (the replay/full copy closes it at once)
+            recovery_lags.append(prev_lag)
+        replayed += r
+        full += f
+        lags.append(lag)
+        prev_lag = lag
+        losses.append(float(aux["loss"]))
+    w = np.asarray(state["w"])
+    bit_equal = all(
+        np.array_equal(np.asarray(state["w_w"][j]), w) for j in range(N_W))
+    return {
+        "bench": "resync", "arm": "soak", "steps": n_steps,
+        "ring_depth": RING, "replayed": replayed, "full": full,
+        "max_version_lag": int(max(lags)),
+        "mean_recovery_latency_steps": round(
+            float(np.mean(recovery_lags)), 3) if recovery_lags else 0.0,
+        "final_loss": round(losses[-1], 4),
+        "loss_descending": bool(losses[-1] < losses[0]),
+        "w_estimates_bit_equal": bool(bit_equal),
+    }
+
+
+def _supervisor_row(fast: bool) -> dict:
+    params, metas, gal, batch = _problem()
+    opt = EF21Muon(EF21MuonConfig(n_workers=N_W, beta=0.5, w2s="top10",
+                                  use_pallas=False))
+    state = opt.init(jax.random.key(0), params, metas)
+    step = jax.jit(lambda s, b: opt.make_step(metas)(s, gal, b, 0.05))
+    state, _ = step(state, batch)   # compile outside the watched region
+    n_steps = 6 if fast else 12
+    stall_at = 2
+    faults = parse_faults(f"stall:w=0:steps={stall_at}:ms=60000", N_W)
+    sup = Supervisor(SupervisorConfig(step_timeout_s=2.0, max_retries=2,
+                                      backoff_base_s=0.01))
+    t0 = time.time()
+    t_recover = 0.0
+    for i in range(n_steps):
+        t_s = time.time()
+        result, _, _ = sup.run_step(step, state, batch, step=i,
+                                    faults=faults)
+        state, _ = result
+        if i == stall_at:
+            t_recover = time.time() - t_s
+    return {
+        "bench": "resync", "arm": "supervisor", "steps": n_steps,
+        "retries": sup.retries, "reloads": sup.reloads,
+        "stalled_step_recovery_s": round(t_recover, 2),
+        "wall_s": round(time.time() - t0, 2),
+        "completed": True,
+    }
+
+
+def run(fast: bool = False):
+    return [_soak_row(fast), _supervisor_row(fast)]

@@ -14,7 +14,7 @@ import sys
 import time
 
 BENCHES = ("table2", "wire", "ns", "step", "ef_necessity", "convergence",
-           "elastic", "kernels", "fig1", "roofline")
+           "elastic", "resync", "kernels", "fig1", "roofline")
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
@@ -34,12 +34,14 @@ def main() -> None:
     from types import SimpleNamespace
 
     from benchmarks import (convergence, ef_necessity, fig1_compression,
-                            kernel_bench, ns_bench, roofline_report,
-                            step_bench, table2_bytes, wire_bytes)
+                            kernel_bench, ns_bench, resync_soak,
+                            roofline_report, step_bench, table2_bytes,
+                            wire_bytes)
     mods = {"table2": table2_bytes, "wire": wire_bytes, "ns": ns_bench,
             "step": step_bench, "ef_necessity": ef_necessity,
             "convergence": convergence,
             "elastic": SimpleNamespace(run=convergence.run_elastic),
+            "resync": resync_soak,
             "kernels": kernel_bench,
             "fig1": fig1_compression, "roofline": roofline_report}
     names = [n.strip() for n in args.only.split(",") if n.strip()] \

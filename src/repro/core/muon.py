@@ -39,8 +39,11 @@ import jax.numpy as jnp
 
 from repro.dist.layerwise import LayerPlan, dense_payload_bytes, vmap_n
 from repro.dist.participation import (mask_bcast, participation_mask,
-                                      payload_finite_mask, validate_spec)
+                                      payload_finite_mask, reception_mask,
+                                      validate_spec)
 from repro.dist.pipeline import s2w_issue_order
+from repro.dist.resync import (init_resync_state, replay_masks,
+                               resolve_ring_depth, ring_push)
 from repro.obs.metrics import (MetricSet, leaf_names, orth_residual,
                                rel_error, worker_mean_norm)
 from repro.obs.trace import PHASE_SPANS, phase_span, wire_stage_span
@@ -130,6 +133,19 @@ class EF21MuonConfig:
                                    # global skip (X frozen). Forced on
                                    # whenever a FaultPlan is passed to
                                    # make_step
+    resync: Any = None             # desynchronized-worker rejoin (§13):
+                                   # None/0 compiles the subsystem out
+                                   # (the default, lowering-identical
+                                   # arm); an int R >= 1 keeps per-
+                                   # worker model estimates W_j, a
+                                   # [n_workers] version vector and a
+                                   # replay ring of the last R packed
+                                   # s2w broadcast rounds, so a worker
+                                   # absent <= R rounds catches up by
+                                   # replaying compressed deltas and a
+                                   # longer absence takes a full W
+                                   # copy. Requires a compressing s2w
+                                   # leg (the stream being replayed)
 
 
 def _unzip(pairs: list, n: int) -> tuple[list, ...]:
@@ -257,6 +273,23 @@ class EF21Muon:
         if cfg.s2w != "identity":
             state["w"] = jax.tree.map(lambda p: p.astype(sd), params)
             state["cs_state"] = plan.unflatten(cs_states)
+        ring_depth = resolve_ring_depth(cfg.resync)
+        if ring_depth:
+            if cfg.s2w == "identity":
+                raise ValueError(
+                    "resync requires a compressing s2w leg (s2w != "
+                    "'identity'): rejoin replays the server->worker "
+                    "broadcast stream")
+            # per-worker model estimates W_j (§13): every worker starts
+            # current, bit-equal to the server's W
+            state["w_w"] = jax.tree.map(
+                lambda p: jnp.broadcast_to(
+                    p.astype(sd)[None], (cfg.n_workers,) + p.shape) + 0,
+                params)
+            state["resync"] = init_resync_state(
+                cfg.n_workers, ring_depth,
+                plan.wire_layout(cfg.wire_dtype,
+                                 direction="s2w").total_nbytes)
         return state
 
     # ------------------------------------------------------------ bookkeeping
@@ -361,6 +394,13 @@ class EF21Muon:
         # (lowering-identical, the bit-equal A/B arm)
         guard = cfg.nonfinite_guard or faults is not None
         elastic = cfg.participation != "full" or guard
+        ring_depth = resolve_ring_depth(cfg.resync)
+        if ring_depth and cfg.s2w == "identity":
+            raise ValueError(
+                "resync requires a compressing s2w leg (s2w != "
+                "'identity'): rejoin replays the server->worker "
+                "broadcast stream")
+        resync_on = ring_depth > 0
         pack_wire = cfg.wire_pack and reshard_payloads is not None
         if reshard_updates is None:
             reshard_updates = reshard_payloads
@@ -392,6 +432,18 @@ class EF21Muon:
             splan = resolve_stage_plan(cfg, plan, mesh=mesh, fsdp=fsdp,
                                        any_pack=pack_wire or pack_s2w)
 
+            # ---- §13 reception mask: who hears THIS round's s2w
+            # broadcast. Network-level semantics: scheduled absence and
+            # declared drop faults gate reception; guard demotion does
+            # NOT (a demoted worker's compute is poisoned, not its
+            # downlink), so it is computed up front, before the guard
+            # can see any payload.
+            recv = None
+            if resync_on:
+                recv = reception_mask(
+                    cfg.participation, cfg.n_workers, state["step"],
+                    cfg.participation_seed, faults=faults)
+
             # ---- 1. EF21-P: workers' model estimate W (S = C_P(X - W)).
             # With s2w wire packing the broadcast leg is explicit (§9):
             # the server packs S into the s2w uint8 wire buffer, tiles
@@ -406,6 +458,7 @@ class EF21Muon:
             # (wire_pack_s2w=False) is value-bit-equal because
             # pack -> unpack is bit-exact and apply_payload is the
             # same estimate update ef_compress_step performs.
+            ring_row = None   # §13: this round's packed s2w bytes
             with phase_span(PHASE_SPANS[0], gspan):
                 if cfg.s2w != "identity" and pack_s2w:
                     cs_f = plan.flatten(state["cs_state"])
@@ -449,6 +502,13 @@ class EF21Muon:
                                             gspan):
                                 sbufs[k] = broadcast(
                                     swire.pack_stage(k, lead))
+                        if resync_on:
+                            # §13 replay ring row: this round's gathered
+                            # broadcast bytes verbatim, stage sub-
+                            # buffers concatenated in stage order
+                            ring_row = jnp.concatenate(
+                                [sbufs[k][0]
+                                 for k in range(splan.n_stages)])
                         for k in order:
                             for i, pl in zip(
                                     splan.stages[k].leaf_ids,
@@ -459,28 +519,116 @@ class EF21Muon:
                                                  direction="s2w")
                         with phase_span(wire_stage_span("s2w", 0), gspan):
                             buf = broadcast(swire.pack(lead))
+                        if resync_on:
+                            ring_row = buf[0]
                         for i, pl in enumerate(swire.unpack(buf)):
                             w_l[i] = s2w_apply(i, pl)
                     w_tree = plan.unflatten(w_l)
                     cs_tree = plan.unflatten(cs_l)
                 elif cfg.s2w != "identity":
-                    cs_l, w_l = _unzip(plan.map_flat(
+                    s_payloads, cs_l, w_l = _unzip(plan.map_flat(
                         lambda lp, cs, w, x: ef_compress_step(
-                            lp.s2w, cs, w, x, cfg.wire_dtype)[1:],
+                            lp.s2w, cs, w, x, cfg.wire_dtype),
                         plan.flatten(state["cs_state"]),
                         plan.flatten(state["w"]),
-                        plan.flatten(state["x"])), 2)
+                        plan.flatten(state["x"])), 3)
                     w_tree = plan.unflatten(w_l)
                     cs_tree = plan.unflatten(cs_l)
+                    if resync_on:
+                        # unpacked arm: no wire bytes exist, so pack the
+                        # ring row locally through the same monolithic
+                        # s2w layout — a value identity with the packed
+                        # arm's gathered bytes (pack is deterministic
+                        # and unpack is its bit-exact inverse)
+                        lead = [jax.tree.map(lambda a: a[None], p)
+                                for p in s_payloads]
+                        ring_row = plan.wire_layout(
+                            cfg.wire_dtype, direction="s2w").pack(lead)[0]
                 else:
                     w_tree, cs_tree = state["x"], None
 
+            # ---- §13 rejoin: push this round into the replay ring,
+            # advance the version vector, and bring every receiving
+            # worker's W_j current — by replaying missed rounds from the
+            # ring (lag <= R, ascending round order, the exact
+            # apply_payload algebra per slot) or by a full copy of the
+            # server's post-round W (lag > R). Each ring slot is
+            # decompressed ONCE (the broadcast was a single message) and
+            # the per-worker application is where-masked, so replay adds
+            # no collectives — the §8/§9 wire invariants are untouched.
+            if resync_on:
+                with phase_span("resync/replay", gspan):
+                    ring_new = ring_push(state["resync"]["ring"],
+                                         ring_row)
+                    rm = replay_masks(state["resync"]["vv"],
+                                      state["step"], recv, ring_depth)
+                    if pack_s2w and splan is not None:
+                        rswire = plan.staged_wire_layout(
+                            cfg.wire_dtype, splan, direction="s2w")
+                        offs = [0]
+                        for k in range(rswire.n_stages):
+                            offs.append(offs[-1] + rswire.stage_nbytes(k))
+
+                        def unpack_row(row):
+                            pls: list = [None] * len(plan.leaves)
+                            for k in range(rswire.n_stages):
+                                seg = jax.lax.slice_in_dim(
+                                    row, offs[k], offs[k + 1])
+                                for i, pl in zip(
+                                        splan.stages[k].leaf_ids,
+                                        rswire.unpack_stage(
+                                            k, seg[None])):
+                                    pls[i] = pl
+                            return pls
+                    else:
+                        rswire = plan.wire_layout(cfg.wire_dtype,
+                                                  direction="s2w")
+
+                        def unpack_row(row):
+                            return rswire.unpack(row[None])
+
+                    slot_pls = [unpack_row(ring_new[r])
+                                for r in range(ring_depth)]
+                    w_srv_f = plan.flatten(w_tree)
+
+                    def rejoin_leaf(i, w):
+                        lp = plan.leaves[i]
+                        for r in range(ring_depth):
+                            delta = vmap_n(
+                                lambda q, c=lp.s2w, s=lp.slice_shape:
+                                c.decompress(q, s, jnp.float32),
+                                lp.meta.stack_dims)(
+                                    jax.tree.map(lambda a: a[0],
+                                                 slot_pls[r][i]))
+                            w = jnp.where(
+                                mask_bcast(rm.apply[r], w.ndim),
+                                (w.astype(jnp.float32)
+                                 + delta[None]).astype(w.dtype), w)
+                        return jnp.where(
+                            mask_bcast(rm.full, w.ndim),
+                            w_srv_f[i].astype(w.dtype)[None], w)
+
+                    w_w_tree = plan.unflatten(
+                        [rejoin_leaf(i, w) for i, w in
+                         enumerate(plan.flatten(state["w_w"]))])
+
             # ---- 2. per-worker stochastic gradients at W (no cross-worker comm)
             with phase_span(PHASE_SPANS[1], gspan):
-                w_cast = jax.tree.map(
-                    lambda w, x: w.astype(x.dtype), w_tree, state["x"])
-                losses, grads = jax.vmap(grad_and_loss, in_axes=(None, 0))(
-                    w_cast, batch)
+                if resync_on:
+                    # §13: each worker differentiates at its OWN model
+                    # estimate W_j (stale for desynchronized workers —
+                    # their commits are frozen by the §11 mask anyway)
+                    w_cast = jax.tree.map(
+                        lambda w, x: w.astype(x.dtype), w_w_tree,
+                        state["x"])
+                    losses, grads = jax.vmap(
+                        grad_and_loss, in_axes=(0, 0))(w_cast, batch)
+                else:
+                    w_cast = jax.tree.map(
+                        lambda w, x: w.astype(x.dtype), w_tree,
+                        state["x"])
+                    losses, grads = jax.vmap(
+                        grad_and_loss, in_axes=(None, 0))(w_cast, batch)
                 if faults is not None:
                     # poisoned gradient leaves (§11): NaN/Inf injected on
                     # the declared schedule — flows through momentum into
@@ -530,8 +678,8 @@ class EF21Muon:
             # too). resolve_mask returns the final mask, the dynamic-
             # count fold denominator, the skip-step flag (no survivors)
             # and the demoted-by-guard count.
-            sched_mask = None
-            if elastic:
+            sched_mask = recv   # §13 arm: same conjunction, computed
+            if elastic and sched_mask is None:  # up front for the ring
                 sched_mask = participation_mask(
                     cfg.participation, cfg.n_workers, state["step"],
                     cfg.participation_seed)
@@ -758,6 +906,15 @@ class EF21Muon:
                     if cfg.s2w != "identity" else 0.0))
                 mset.add("wire/n_stages", float(
                     splan.n_stages if splan is not None else 1))
+                if resync_on:
+                    # §13 rejoin telemetry — pure reads of the replay
+                    # mask algebra, never fed back into the update
+                    mset.add("part/worker_version_lag_max",
+                             rm.lag_max.astype(jnp.float32))
+                    mset.add("resync/replayed",
+                             rm.n_replayed.astype(jnp.float32))
+                    mset.add("resync/full",
+                             rm.n_full.astype(jnp.float32))
 
             new_state = {
                 "step": state["step"] + 1,
@@ -770,6 +927,12 @@ class EF21Muon:
             if cfg.s2w != "identity":
                 new_state["w"] = w_tree
                 new_state["cs_state"] = cs_tree
+            if resync_on:
+                # §13: worker estimates, version vector and ring advance
+                # even on a skipped step — the server's W advanced too,
+                # and the broadcast stream must stay contiguous
+                new_state["w_w"] = w_w_tree
+                new_state["resync"] = {"vv": rm.vv_new, "ring": ring_new}
             aux = {"loss": jnp.mean(losses),
                    "grad_est_norm": jnp.sqrt(sum(
                        jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -778,6 +941,10 @@ class EF21Muon:
                 aux["participation"] = part[0]
                 aux["n_participants"] = jnp.sum(part[0].astype(jnp.int32))
                 aux["skipped"] = ~part[2]
+            if resync_on:
+                aux["resync_replayed"] = rm.n_replayed
+                aux["resync_full"] = rm.n_full
+                aux["version_lag_max"] = rm.lag_max
             if mset is not None:
                 aux["metrics"] = mset
             return new_state, aux

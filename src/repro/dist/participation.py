@@ -127,6 +127,22 @@ def participation_mask(spec, n_workers: int, step, seed: int = 0):
     raise ValueError(f"unknown participation spec {spec!r}")
 
 
+def reception_mask(spec, n_workers: int, step, seed: int = 0,
+                   faults=None):
+    """The ``[n_workers]`` *reception* mask for ``step`` — the §13
+    resync semantics: a worker "heard" this round's s2w broadcast iff it
+    was scheduled to participate AND no drop fault severed its link.
+    Guard demotion deliberately does NOT gate this (a worker whose
+    payload went non-finite has poisoned compute, not a dead downlink),
+    which is why reception is computable *before* the gradients exist —
+    the version vector and replay ring (``dist/resync.py``) advance on
+    it."""
+    mask = participation_mask(spec, n_workers, step, seed)
+    if faults is not None:
+        mask = mask & faults.drop_mask(step)
+    return mask
+
+
 def payload_finite_mask(payloads, n_workers: int):
     """Per-worker payload finiteness: ``[n_workers]`` bool, False for any
     worker whose payload carries a non-finite float anywhere.

@@ -1,0 +1,160 @@
+"""Desynchronized-worker rejoin: versioned W resync over the wire
+(DESIGN.md §13).
+
+PR 8 made the step survive *within-step* faults, but a worker absent
+across a server->worker (s2w) broadcast silently drifts: its model
+estimate W is stale forever after, which breaks both the EF21-P
+sender/receiver invariant (§2) and the Gluon-FL partial-participation
+contraction argument the elastic extension (§11) relies on. This module
+is the rejoin algebra that closes that gap, all of it in-graph:
+
+  * a per-worker **version vector** ``vv`` (``[n_workers]`` int32):
+    ``vv[j]`` is the number of s2w rounds worker j has applied, i.e. the
+    next round it needs. Advanced by the reception mask each step;
+    frozen for absent workers.
+  * a bounded **replay ring buffer** of the last R packed s2w broadcast
+    rounds (``[R, total_s2w_nbytes]`` uint8 — the ``wire/layout.py``
+    bytes verbatim, stage sub-buffers concatenated in stage order). The
+    ring is roll-pushed every round, so after the push slot ``r``
+    statically holds round ``step - (R-1) + r`` and slot ``R-1`` is the
+    current round.
+  * the **replay masks**: a rejoining worker with lag <= R catches up by
+    replaying the missed rounds through the exact ``apply_payload``
+    algebra (decompress once per slot, shared across workers — the
+    broadcast was one message), in ascending round order, which is
+    bit-identical to having applied each round on time. A worker with
+    lag > R takes a **full W resync**: a bit-copy of the server's
+    post-round W (in-graph for live processes; a fresh process is served
+    the same tree through the atomic-checkpoint machinery,
+    ``serve_full_resync``).
+
+Reception semantics: the mask that advances ``vv`` is the *scheduled*
+participation mask AND the fault drop mask — network-level reception.
+Guard demotion (§11) does NOT gate it: a worker whose payload went
+non-finite still heard the broadcast (its compute is poisoned, not its
+downlink). Skipped steps (all workers demoted) still advance the
+ring/vv/W estimates, consistent with the server's W advancing on skip.
+
+Everything here is mask algebra over static shapes: replay adds NO new
+collectives (the ring is replicated, decompression is local), so the
+§8/§9 exact-2K-u8-gather wire invariants hold unchanged under a
+drop -> rejoin -> replay cycle (pinned in ``tests/test_sharding.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# XLA shape dims are signed-int32-bounded on the paths the ring hits; a
+# packed s2w row past this is also far past any sane replicated buffer
+_MAX_RING_ROW_NBYTES = 2**31 - 1
+
+
+def resolve_ring_depth(resync: Any) -> int:
+    """The resolved replay-ring depth R: ``None``/``0``/``False`` turn
+    the subsystem off (returns 0 — the lowering-identical default arm);
+    an int >= 1 is the bound R on replayable lag."""
+    if resync is None or resync is False or resync == 0:
+        return 0
+    r = int(resync)
+    if r < 1:
+        raise ValueError(f"resync ring depth must be >= 1, got {resync!r}")
+    return r
+
+
+def init_resync_state(n_workers: int, ring_depth: int,
+                      row_nbytes: int) -> dict:
+    """Fresh resync state: all-zero version vector (every worker needs
+    round 0 next) and a zeroed ring. Zero-filled slots are never applied:
+    at step t slot r holds round ``t - (R-1) + r`` and the replay mask
+    requires ``round >= vv[j] >= 0``, so pre-history (negative) rounds
+    are masked out by construction."""
+    if row_nbytes > _MAX_RING_ROW_NBYTES:
+        raise ValueError(
+            f"resync ring row ({row_nbytes} packed s2w bytes) exceeds the "
+            f"XLA dimension limit ({_MAX_RING_ROW_NBYTES}); the replicated "
+            "in-graph ring is not viable at this model scale — serve "
+            "rejoining workers a full W resync out-of-process instead "
+            "(dist.resync.serve_full_resync over the checkpoint archive)")
+    return {
+        "vv": jnp.zeros((n_workers,), jnp.int32),
+        "ring": jnp.zeros((ring_depth, row_nbytes), jnp.uint8),
+    }
+
+
+def ring_push(ring: jax.Array, row: jax.Array) -> jax.Array:
+    """Roll-push ``row`` (the current round's packed s2w bytes) into the
+    ring: oldest slot falls off the front, the new round lands in slot
+    R-1. Static slot indexing — slot r always holds round
+    ``step - (R-1) + r`` after the push."""
+    return jnp.concatenate([ring[1:], row[None].astype(jnp.uint8)], axis=0)
+
+
+@dataclass(frozen=True)
+class ReplayMasks:
+    """The per-step rejoin decision, all ``[n_workers]``-shaped algebra.
+
+    ``apply[r, j]`` — replay ring slot r into worker j's W estimate
+    (slots are applied in ascending r == ascending round order);
+    ``full[j]`` — worker j rejoins with lag > R and takes the full
+    W copy instead; ``vv_new`` — the advanced version vector. The
+    count/lag scalars feed §10 telemetry and the step ``aux``."""
+    apply: jax.Array       # [R, n_workers] bool
+    full: jax.Array        # [n_workers] bool
+    vv_new: jax.Array      # [n_workers] int32
+    n_replayed: jax.Array  # workers that caught up via replay (lag >= 1)
+    n_full: jax.Array      # workers that took the full W resync
+    lag_max: jax.Array     # max post-update version lag across workers
+
+
+def replay_masks(vv: jax.Array, step, recv: jax.Array,
+                 ring_depth: int) -> ReplayMasks:
+    """The rejoin masks for one round.
+
+    ``vv`` is the version vector BEFORE this round, ``step`` the (traced)
+    round counter, ``recv`` the reception mask for this round's
+    broadcast. After the ring push, slot r holds round
+    ``step - (R-1) + r``; worker j is *replayable* iff its next needed
+    round is still in the ring (``vv[j] >= step - (R-1)``), in which
+    case it applies every slot with ``round >= vv[j]`` — an always-
+    current worker (``vv == step``) applies exactly the current round,
+    so on-time application is the degenerate replay."""
+    r = int(ring_depth)
+    step = jnp.asarray(step, jnp.int32)
+    vv = jnp.asarray(vv, jnp.int32)
+    rounds = step - (r - 1) + jnp.arange(r, dtype=jnp.int32)
+    replayable = vv >= step - (r - 1)
+    apply = (recv[None, :] & replayable[None, :]
+             & (rounds[:, None] >= vv[None, :]))
+    full = recv & ~replayable
+    vv_new = jnp.where(recv, step + 1, vv)
+    n_replayed = jnp.sum(
+        (recv & replayable & (vv < step)).astype(jnp.int32))
+    n_full = jnp.sum(full.astype(jnp.int32))
+    lag_max = jnp.max((step + 1) - vv_new).astype(jnp.int32)
+    return ReplayMasks(apply=apply, full=full, vv_new=vv_new,
+                       n_replayed=n_replayed, n_full=n_full,
+                       lag_max=lag_max)
+
+
+def serve_full_resync(path: str, state_like: Any) -> tuple[Any, int]:
+    """Serve a fresh-process rejoin from the atomic checkpoint
+    (``train/checkpoint.py``): loads the last-good generation (with the
+    ``.prev`` fallback and checksum verification that machinery
+    provides) and returns ``(w_tree, version)`` — the server's model
+    estimate W (falling back to the iterate X for identity-s2w configs,
+    where W == X by construction) and the step it is current at. The
+    caller installs the tree as the rejoining worker's ``w_w[j]`` row
+    and sets ``vv[j] = version``; from there the in-graph replay path
+    takes over."""
+    from repro.train.checkpoint import load_checkpoint
+    state, step = load_checkpoint(path, state_like)
+    if not isinstance(state, dict) or "x" not in state:
+        raise ValueError(
+            f"{path}: not an optimizer-state checkpoint (no 'x' entry)")
+    w = state["w"] if state.get("w") is not None else state["x"]
+    return w, int(step or 0)

@@ -122,10 +122,12 @@ def state_pspecs(state: dict, params: Any, metas: Any, mesh,
 
     * ``x`` / ``g_server`` / ``w``: the parameter rule (plus the zero-1
       layer-parallel rule when ``zero1_lmo``);
-    * ``g_w`` / ``m_w``: leading worker dim on ``worker_axis_for(mesh)``,
-      remaining dims follow the parameter rule;
-    * ``step``: replicated; compressor states and anything else:
-      replicated (they are sketches / PRNG keys, small by construction).
+    * ``g_w`` / ``m_w`` / ``w_w`` (the §13 per-worker model estimates):
+      leading worker dim on ``worker_axis_for(mesh)``, remaining dims
+      follow the parameter rule;
+    * ``step``: replicated; compressor states, the §13 resync
+      version-vector/ring and anything else: replicated (they are
+      sketches / PRNG keys / u8 rings, small by construction).
 
     Only leaf ``.shape`` attributes are read, so abstract states
     (ShapeDtypeStruct / eval_shape output) work.
@@ -145,7 +147,7 @@ def state_pspecs(state: dict, params: Any, metas: Any, mesh,
         elif k in ("x", "g_server", "w"):
             rule = _zero1_pspec if zero1_lmo else param_pspec
             out[k] = map_like(v, lambda m, s: rule(m, s, mesh, fsdp))
-        elif k in ("g_w", "m_w"):
+        elif k in ("g_w", "m_w", "w_w"):
             out[k] = map_like(v, lambda m, s: _worker_pspec(m, s, mesh, fsdp))
         elif k == "step":
             out[k] = P()

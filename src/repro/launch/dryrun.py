@@ -101,7 +101,7 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
                zero1_lmo: bool = False, wire_pack: bool = True,
                ns_bucketing: bool = True, wire_stages="auto",
                wire_pack_s2w="auto", participation="full",
-               faults: str | None = None):
+               faults: str | None = None, resync: int = 0):
     """Lower + compile one (arch, shape, mesh). Returns the record dict."""
     import dataclasses
     cfg = get_config(arch)
@@ -138,13 +138,18 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool,
             use_pallas=False, zero1_lmo=zero1_lmo,
             wire_pack=wire_pack, ns_bucketing=ns_bucketing,
             wire_stages=wire_stages, wire_pack_s2w=wire_pack_s2w,
-            participation=participation, faults=fplan),
+            participation=participation, faults=fplan,
+            resync=resync),
             mesh=mesh)
         if participation != "full" or fplan is not None:
             # the elastic/chaos dry-run arm: prove the masked fold +
             # guard lower and compile at production scale
             rec.update(participation=str(participation),
                        faults=faults or "")
+        if resync:
+            # the §13 rejoin arm: prove the replay ring + per-worker W
+            # estimates lower and compile at production scale
+            rec.update(resync=int(resync))
         # wire accounting: analytic Table-2 bytes vs the exact bytes the
         # fused payload buffer moves (compare with the measured
         # u8_coll_bytes parsed from the compiled HLO below; that
@@ -373,6 +378,10 @@ def main():
                     help="elastic worker participation (§11): 'full', "
                          "'bernoulli(p)' or 'round_robin(k)' — proves "
                          "the masked fold compiles at production scale")
+    ap.add_argument("--resync", type=int, default=0, metavar="R",
+                    help="desynchronized-worker rejoin (§13): R-deep "
+                         "replay ring + per-worker W estimates; needs "
+                         "a compressing --s2w")
     ap.add_argument("--faults", default=None, metavar="SPEC",
                     help="chaos schedule compiled into the step "
                          "(repro.train.faults grammar)")
@@ -418,7 +427,7 @@ def main():
                           wire_pack_s2w=(False if args.no_wire_pack_s2w
                                          else "auto"),
                           participation=args.participation,
-                          faults=args.faults)
+                          faults=args.faults, resync=args.resync)
                 try:
                     if args.ns_ab:
                         recs = list(ns_ab_pair(arch, shape, mesh == "multi",

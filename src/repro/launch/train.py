@@ -23,6 +23,7 @@ from repro.obs.sink import MetricsWriter, run_manifest
 from repro.obs.trace import span_summary
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 from repro.train.faults import parse_faults
+from repro.train.supervisor import Supervisor, SupervisorConfig
 from repro.train.trainer import Trainer, TrainerConfig
 
 
@@ -98,7 +99,28 @@ def main():
                          "(in-place buffer reuse instead of double-"
                          "buffering; the §12 donation-audit rule "
                          "certifies the aliasing)")
+    ap.add_argument("--resync", type=int, default=0, metavar="R",
+                    help="desynchronized-worker rejoin (§13): keep "
+                         "per-worker W estimates + an R-deep replay ring "
+                         "of packed s2w rounds; 0 compiles it out. "
+                         "Requires a compressing --s2w")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the loop under the §13 supervisor "
+                         "(per-step timeout, bounded retry, checkpoint-"
+                         "reload recovery)")
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    metavar="SEC", help="supervisor per-step watchdog")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="supervisor re-dispatches per step")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    metavar="N", help="periodic last-good checkpoint to "
+                         "--checkpoint every N steps (supervisor "
+                         "recovery granularity)")
     args = ap.parse_args()
+    if args.supervise and args.donate:
+        print("warning: --supervise needs the input state intact for "
+              "retries; disabling --donate")
+        args.donate = False
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -113,7 +135,7 @@ def main():
         remat=False, use_pallas=False, metrics=args.metrics_out is not None,
         trace_spans=args.trace_spans, participation=args.participation,
         participation_seed=args.participation_seed, faults=faults,
-        donate=args.donate)
+        donate=args.donate, resync=args.resync)
     tr = Trainer(model, tcfg)
     state = tr.init(jax.random.key(args.seed))
     start = 0
@@ -148,11 +170,48 @@ def main():
         writer = MetricsWriter(
             args.metrics_out,
             manifest=run_manifest(tcfg, None, extra={"arch": cfg.name}))
+    sup = None
+    if args.supervise:
+        sup = Supervisor(
+            SupervisorConfig(
+                step_timeout_s=args.step_timeout,
+                max_retries=args.max_retries,
+                checkpoint_path=args.checkpoint,
+                checkpoint_every=args.checkpoint_every),
+            writer=writer, state_like=state)
+        if writer is not None:
+            writer.write("recovery", step=start, event="resume" if
+                         args.resume else "start", attempt=0)
+    resync_replayed = resync_full = last_lag = 0
     last_metrics: dict = {}
+    aux = {"loss": float("nan")}   # resumed-at-end runs skip the loop
     t0 = time.time()
     try:
-        for i in range(start, args.steps):
-            state, aux = step_fn(state, data.batch_at(i), sched(i))
+        i = start
+        while i < args.steps:
+            if faults is not None:
+                # simulated power loss (crash:step=s): fresh runs only,
+                # so the --resume run sails past the crash step
+                faults.host_crash(i, start_step=start)
+            if sup is not None:
+                result, rs_state, rs_step = sup.run_step(
+                    step_fn, state, data.batch_at(i), sched(i),
+                    step=i, faults=faults)
+                if result is None:
+                    # checkpoint-reload recovery: rewind the loop to the
+                    # last-good generation and re-step from there
+                    state, i = rs_state, rs_step
+                    print(f"recovered from {args.checkpoint} "
+                          f"@ step {i}", flush=True)
+                    continue
+                state, aux = result
+                sup.maybe_checkpoint(state, i)
+            else:
+                state, aux = step_fn(state, data.batch_at(i), sched(i))
+            if "resync_replayed" in aux:
+                resync_replayed += int(aux["resync_replayed"])
+                resync_full += int(aux["resync_full"])
+                last_lag = int(aux["version_lag_max"])
             if i % args.log_every == 0 or i == args.steps - 1:
                 row = {"step": i, "loss": round(float(aux["loss"]), 4),
                        "radius": round(float(sched(i)), 5),
@@ -162,17 +221,30 @@ def main():
                 print(json.dumps(row), flush=True)
                 if writer is not None:
                     last_metrics = aux["metrics"].host_floats()
+                    if sup is not None:
+                        last_metrics["supervisor/retries"] = float(
+                            sup.retries)
                     writer.write("step", metrics=last_metrics, **row)
+            i += 1
         if args.checkpoint:
             save_checkpoint(args.checkpoint, state, step=args.steps)
             print(f"saved {args.checkpoint}")
         spans = span_summary()
         ef_rows = _ef_summary_rows(last_metrics)
         _print_tables(spans, ef_rows)
+        summary = {"final_loss": round(float(aux["loss"]), 4),
+                   "resync_replayed": resync_replayed,
+                   "resync_full": resync_full,
+                   "version_lag_max": last_lag,
+                   "supervisor_retries": sup.retries if sup else 0,
+                   "supervisor_reloads": sup.reloads if sup else 0}
+        # single greppable line: the chaos-soak CI job's assertion hook
+        print("RESYNC_SUMMARY " + json.dumps(summary), flush=True)
         if writer is not None:
             for r in spans:
                 writer.write("span", **r)
-            writer.write("summary", spans=spans, ef_summary=ef_rows)
+            writer.write("summary", spans=spans, ef_summary=ef_rows,
+                         **summary)
     finally:
         if writer is not None:
             writer.close()

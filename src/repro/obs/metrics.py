@@ -22,6 +22,15 @@ Metric names are ``/``-separated taxonomies (DESIGN.md §10):
                             residual, G the small-side gram of the
                             bucket direction, mean over the batch
   wire/...                  static per-direction wire bytes + stage count
+  part/worker_version_lag_max   max s2w version lag across workers after
+                            this round's rejoin (§13; 0 = all current)
+  resync/replayed           workers that caught up this step by replaying
+                            missed rounds from the ring (§13)
+  resync/full               workers that rejoined via the full W resync
+                            (lag > R)
+  supervisor/retries        host-side: cumulative supervised-step
+                            re-dispatches, merged into the step record by
+                            the train CLI (never in-graph)
 
 The helpers here are pure functions of tensors the step already
 computes — adding them never feeds back into the update, which is what

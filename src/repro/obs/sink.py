@@ -22,6 +22,9 @@ Kinds and their required fields (``validate_record``):
     bench     bench:str                          — benchmarks/* rows
     lint      rule/cell/level/message:str        — analysis.lint findings
               (§12); optional data:{...} rule payload
+    recovery  step:int, event:str, attempt:int  — supervisor recovery
+              events (§13): event in {start, resume, timeout, retry,
+              reload, checkpoint, gave_up}
 
 Legacy rows (pre-v1, no ``schema`` key) validate structurally: the kind
 is inferred (``bench`` key => bench, arch/shape/mesh/tag => dryrun), so
@@ -58,6 +61,7 @@ REQUIRED: dict[str, dict] = {
                "status": str},
     "bench": {"bench": str},
     "lint": {"rule": str, "cell": str, "level": str, "message": str},
+    "recovery": {"step": int, "event": str, "attempt": int},
 }
 
 

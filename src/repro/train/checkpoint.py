@@ -13,7 +13,12 @@ reads it back can trust it after a mid-write crash or disk corruption.
     publishes with ``os.replace`` — the atomic-rename pattern, so the
     target path only ever holds a complete file. A pre-existing
     checkpoint is rotated to ``<path>.prev`` first (same-directory
-    rename, also atomic), keeping exactly one last-good generation.
+    rename, also atomic), keeping exactly one last-good generation; a
+    legacy bare-path archive (pre-``.npz`` runs) counts as that previous
+    generation and is rotated the same way, so it can no longer shadow
+    freshly saved files on load. After the publish the parent directory
+    is fsynced — the rename itself isn't durable on power loss
+    otherwise.
   * The archive embeds a ``__manifest__`` JSON entry with a per-array
     CRC32 + shape + dtype; ``load_checkpoint`` re-hashes every array and
     refuses silently-corrupted data, not just truncated zips.
@@ -94,12 +99,37 @@ def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
                 np.savez(f, **flat)
                 f.flush()
                 os.fsync(f.fileno())
-            if os.path.exists(final):
+            if path != final and os.path.exists(path) \
+                    and not os.path.exists(final):
+                # legacy pre-".npz" archive at the bare path: left in
+                # place it would shadow `final` on every future load
+                # (load_checkpoint prefers an existing bare path), so
+                # rotate it to the last-good slot like any other
+                # previous generation
+                os.replace(path, final + ".prev")
+            elif os.path.exists(final):
                 os.replace(final, final + ".prev")
             os.replace(tmp, final)
+            _fsync_dir(os.path.dirname(final) or ".")
         finally:
             if os.path.exists(tmp):
                 os.remove(tmp)
+
+
+def _fsync_dir(dirname: str) -> None:
+    # os.replace makes the file content durable but the *rename* lives
+    # in the directory; without this a power loss can resurrect the old
+    # directory entry. Best-effort: not all filesystems allow dir fds.
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _read_verified(path: str) -> dict[str, np.ndarray]:

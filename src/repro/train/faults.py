@@ -27,25 +27,48 @@ lowers to a ``jnp.where(step_in_range, faulty, clean)`` — the compiled
 program is identical across steps and the schedule is exactly
 reproducible (and resume-stable).
 
+Two *host-side* clauses (DESIGN.md §13) drive the supervisor instead of
+the jitted step — they never enter the graph:
+
+  ``stall``      worker j's step is delayed by N milliseconds for steps
+                 [start, stop) (``host_stall`` sleeps before dispatch);
+                 exercises the supervisor's per-step timeout + retry
+                 path. Retries skip the sleep, so a stalled step
+                 recovers on attempt 1.
+  ``crash``      hard ``os._exit`` at one step (``host_crash``) —
+                 simulated power loss for crash/resume testing. Only
+                 fires on a run that started from step 0, so the
+                 ``--resume`` run sails past the crash step.
+
 CLI grammar (``parse_faults``), comma-separated clauses:
 
     drop:w=1:steps=5-10          worker 1 absent for steps 5..9
     nan:w=0:steps=7              NaN gradient leaf on worker 0 at step 7
     inf:w=2:steps=3-6            Inf gradient leaf, worker 2, steps 3..5
     flip:steps=4:bits=8          8 flipped wire bytes at step 4
+    stall:w=1:steps=5-7:ms=500   worker 1 stalls 500 ms at steps 5..6
+    crash:step=9                 process hard-exits at step 9 (fresh
+                                 runs only)
 
 ``steps=a-b`` is the half-open range [a, b); ``steps=a`` means [a, a+1).
 """
 from __future__ import annotations
 
+import os
 import re
+import time
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-_CLAUSE_RE = re.compile(r"^(drop|nan|inf|flip)((?::[a-z_]+=[0-9-]+)*)$")
+_CLAUSE_RE = re.compile(
+    r"^(drop|nan|inf|flip|stall|crash)((?::[a-z_]+=[0-9-]+)*)$")
+
+#: exit status of a ``crash:step=s`` fault — distinct from generic
+#: failures so the soak harness can assert the crash actually fired.
+CRASH_EXIT = 43
 
 
 @dataclass(frozen=True)
@@ -72,6 +95,28 @@ class WireFault:
 
 
 @dataclass(frozen=True)
+class StallFault:
+    worker: int
+    start: int
+    stop: int
+    ms: int = 1000      # host-side delay per stalled step
+
+
+@dataclass(frozen=True)
+class CrashFault:
+    step: int
+    # half-open range view, so the shared validation/active_any logic
+    # treats a crash like any other single-step fault
+    @property
+    def start(self):
+        return self.step
+
+    @property
+    def stop(self):
+        return self.step + 1
+
+
+@dataclass(frozen=True)
 class FaultPlan:
     """Seeded, declared fault schedule — see module docstring."""
     n_workers: int
@@ -79,17 +124,23 @@ class FaultPlan:
     drops: tuple = ()        # DropFault...
     grad_faults: tuple = ()  # GradFault...
     wire_faults: tuple = ()  # WireFault...
+    stalls: tuple = ()       # StallFault...  (host-side)
+    crashes: tuple = ()      # CrashFault...  (host-side)
 
     def __post_init__(self):
-        for f in self.drops + self.grad_faults:
+        for f in self.drops + self.grad_faults + self.stalls:
             if not 0 <= f.worker < self.n_workers:
                 raise ValueError(
                     f"fault worker {f.worker} out of range "
                     f"[0, {self.n_workers})")
-        for f in self.drops + self.grad_faults + self.wire_faults:
+        for f in (self.drops + self.grad_faults + self.wire_faults
+                  + self.stalls + self.crashes):
             if f.stop <= f.start:
                 raise ValueError(f"empty fault step range "
                                  f"[{f.start}, {f.stop})")
+        for f in self.stalls:
+            if f.ms <= 0:
+                raise ValueError(f"stall needs ms > 0, got {f.ms}")
 
     # ------------------------------------------------------------- drops
     def drop_mask(self, step):
@@ -154,20 +205,55 @@ class FaultPlan:
         """Scalar bool: any declared fault active at ``step``."""
         step = jnp.asarray(step, jnp.int32)
         out = jnp.asarray(False)
-        for f in self.drops + self.grad_faults + self.wire_faults:
+        for f in (self.drops + self.grad_faults + self.wire_faults
+                  + self.stalls + self.crashes):
             out = out | ((step >= f.start) & (step < f.stop))
         return out
+
+    # ------------------------------------------------- host-side faults
+    def stall_ms(self, step: int, attempt: int = 0) -> int:
+        """Milliseconds a ``stall`` clause delays host step ``step``
+        (0 when none active). Only attempt 0 stalls: the fault models a
+        transiently wedged worker, so the supervisor's retry dispatch
+        goes through clean."""
+        if attempt != 0:
+            return 0
+        return max((f.ms for f in self.stalls
+                    if f.start <= step < f.stop), default=0)
+
+    def host_stall(self, step: int, attempt: int = 0) -> int:
+        """Sleep out any active stall fault; returns the ms slept."""
+        ms = self.stall_ms(step, attempt)
+        if ms:
+            time.sleep(ms / 1000.0)
+        return ms
+
+    def host_crash(self, step: int, start_step: int = 0) -> None:
+        """Hard process exit (``os._exit(CRASH_EXIT)``) when a ``crash``
+        clause matches ``step`` — simulated power loss, no atexit/flush.
+        Gated on ``start_step == 0`` so a ``--resume`` run (which starts
+        past step 0) replays the same schedule without re-crashing."""
+        if start_step != 0:
+            return
+        for f in self.crashes:
+            if f.step == step:
+                os._exit(CRASH_EXIT)
 
 
 def parse_faults(spec: str, n_workers: int, seed: int = 0) -> FaultPlan:
     """Parse the CLI fault grammar (module docstring) into a FaultPlan."""
-    drops, grads, wires = [], [], []
+    drops, grads, wires, stalls, crashes = [], [], [], [], []
     for clause in [c.strip() for c in spec.split(",") if c.strip()]:
         m = _CLAUSE_RE.match(clause)
         if not m:
             raise ValueError(f"bad fault clause {clause!r}")
         kind = m.group(1)
         kv = dict(p.split("=", 1) for p in m.group(2).split(":") if p)
+        if kind == "crash":
+            if "step" not in kv:
+                raise ValueError(f"fault clause {clause!r} needs step=s")
+            crashes.append(CrashFault(int(kv["step"])))
+            continue
         if "steps" not in kv:
             raise ValueError(f"fault clause {clause!r} needs steps=a[-b]")
         a, _, b = kv["steps"].partition("-")
@@ -177,8 +263,12 @@ def parse_faults(spec: str, n_workers: int, seed: int = 0) -> FaultPlan:
         elif kind in ("nan", "inf"):
             grads.append(GradFault(int(kv["w"]), start, stop, kind,
                                    leaf_id=int(kv.get("leaf", -1))))
+        elif kind == "stall":
+            stalls.append(StallFault(int(kv["w"]), start, stop,
+                                     ms=int(kv.get("ms", 1000))))
         else:  # flip
             wires.append(WireFault(start, stop,
                                    n_bits=int(kv.get("bits", 8))))
     return FaultPlan(n_workers=n_workers, seed=seed, drops=tuple(drops),
-                     grad_faults=tuple(grads), wire_faults=tuple(wires))
+                     grad_faults=tuple(grads), wire_faults=tuple(wires),
+                     stalls=tuple(stalls), crashes=tuple(crashes))

@@ -76,6 +76,13 @@ class TrainerConfig:
                                # schedule (drops / NaN grads / wire bit
                                # flips) injected inside the step (§11);
                                # forces the guard on
+    resync: Any = None         # desynchronized-worker rejoin (§13):
+                               # None/0 compiles the subsystem out
+                               # (lowering-identical to the pre-§13
+                               # step); an int R >= 1 keeps per-worker W
+                               # estimates + an R-deep replay ring of
+                               # packed s2w rounds. Requires a
+                               # compressing s2w leg
     donate: bool = False       # donate the optimizer state to the jitted
                                # step (donate_argnums=(0,)): X / EF21
                                # error / momentum buffers are updated
@@ -105,7 +112,7 @@ class Trainer:
             trace_spans=tcfg.trace_spans,
             participation=tcfg.participation,
             participation_seed=tcfg.participation_seed,
-            nonfinite_guard=bool(guard)))
+            nonfinite_guard=bool(guard), resync=tcfg.resync))
         # metas are static: build once from the model's abstract init
         from repro.models.api import abstract_params
         self._params_shapes, self.metas = abstract_params(model)

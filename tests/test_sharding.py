@@ -215,10 +215,13 @@ faults = None
 if fspec:
     from repro.train.faults import parse_faults
     faults = parse_faults(fspec, 4)
+# rejoin arm (§13): env-selected replay-ring depth; 0 = compiled out
+resync = int(os.environ.get("REPRO_SPMD_RESYNC", "0"))
 tr = Trainer(model, TrainerConfig(n_workers=4, beta=0.5,
                                   w2s="top10+natural", s2w="natural",
                                   use_pallas=False, remat=False,
-                                  participation=part, faults=faults),
+                                  participation=part, faults=faults,
+                                  resync=resync),
              mesh=mesh)
 shape = ShapeSpec("t", "train", 32, 8)
 data = SyntheticLM(cfg, shape, n_workers=4, seed=0)
@@ -251,9 +254,31 @@ gathers = [p for p in a["coll_pairs"] if p["u8"]
 residual = [p for p in a["coll_pairs"] if p["u8"]
             and p["kind"] != "all-gather"]
 split = attribute_u8_directions(gathers, stage_bytes, s2w_stage_bytes)
-# run two real steps on 8 host devices
+# run two real steps on 8 host devices (plus a third on the resync arm,
+# so a drop -> rejoin -> replay cycle completes inside the run)
 state, aux1 = step(state, batch, 0.01)
 state, aux2 = step(state, data.batch_at(1), 0.01)
+auxes = [aux1, aux2]
+if resync:
+    state, aux3 = step(state, data.batch_at(2), 0.01)
+    auxes.append(aux3)
+resync_rec = None
+if resync:
+    resync_rec = {
+        "replayed": [int(np.asarray(a["resync_replayed"])) for a in auxes],
+        "full": [int(np.asarray(a["resync_full"])) for a in auxes],
+        "lag_max": [int(np.asarray(a["version_lag_max"])) for a in auxes],
+    }
+    # bit-equality of every worker's W estimate against the server's,
+    # leaf by leaf, straight off the sharded device arrays
+    eq = True
+    flat_w = jax.tree.leaves(state["w"])
+    flat_ww = jax.tree.leaves(state["w_w"])
+    for w, ww in zip(flat_w, flat_ww):
+        for j in range(4):
+            eq = eq and bool(np.array_equal(np.asarray(ww[j]),
+                                            np.asarray(w)))
+    resync_rec["w_w_equals_w"] = eq
 print(json.dumps({
     "loss1": float(aux1["loss"]), "loss2": float(aux2["loss"]),
     "coll_bytes": a["coll_bytes"], "coll_by_kind": a["coll_by_kind"],
@@ -278,6 +303,7 @@ print(json.dumps({
                        for a in (aux1, aux2)],
     "skipped": [bool(np.asarray(a.get("skipped", False)))
                 for a in (aux1, aux2)],
+    "resync": resync_rec,
 }))
 """
 
@@ -385,3 +411,31 @@ def test_spmd_elastic_worker_dropped_keeps_wire_invariants():
     # 4 workers; the drop fault removes worker 1 when it is scheduled
     assert all(0 < n < 4 for n in rec["n_participants"]), rec
     assert rec["skipped"] == [False, False], rec
+
+
+@pytest.mark.slow
+def test_spmd_resync_rejoin_keeps_wire_invariants():
+    """§13 acceptance: the same 8-device SPMD step with the rejoin
+    subsystem compiled in (R=4 replay ring, per-worker W estimates)
+    under a drop -> rejoin -> replay cycle — worker 1 misses the s2w
+    broadcasts of steps 0 and 1, rejoins at step 2 with lag 2 <= R and
+    catches up by replaying ring slots. The §8/§9 wire invariants must
+    hold byte-for-byte on this arm too: replay adds NO collectives (the
+    ring is replicated, decompression is local), so the u8 population
+    is exactly the same 2K staged gathers. The replayed counter proves
+    the replay really fired, and every worker's W estimate leaves the
+    run bit-equal to the server's — the pinned resync invariant, on the
+    production-sharded program."""
+    rec = _run_spmd_script({
+        "REPRO_SPMD_RESYNC": "4",
+        "REPRO_SPMD_FAULTS": "drop:w=1:steps=0-2"})
+    assert np.isfinite(rec["loss1"]) and np.isfinite(rec["loss2"])
+    _assert_wire_invariants(rec)
+    rs = rec["resync"]
+    assert rs is not None, rec
+    # steps 0,1: worker 1 absent (lag grows); step 2: rejoin via replay
+    assert rs["lag_max"][:2] == [1, 2], rec
+    assert rs["lag_max"][2] == 0, rec
+    assert rs["replayed"][2] >= 1, rec
+    assert sum(rs["full"]) == 0, rec
+    assert rs["w_w_equals_w"] is True, rec
